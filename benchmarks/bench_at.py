@@ -1,0 +1,100 @@
+"""Paper Fig 11 / Fig 12: AT execution time with offloading off vs on.
+
+Methodology mirrors the paper's §4: run the 4-step AT workflow per
+iteration; compare (a) all-local execution against (b) steps 2-4 offloaded.
+Step wall times are MEASURED on this container's CPU; cross-tier scenarios
+are DERIVED through the cost model under two calibrations (see common.py):
+``paper`` (10-node cluster vs 25 Azure VMs, the paper's testbed) and
+``tpu`` (workstation vs 16x16 v5e pod, this repo's target).
+
+The paper reports up to 55% reduction; the ``paper`` calibration should
+land in that neighbourhood.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+
+from benchmarks.common import paper_tiers, row
+from repro.apps.adjoint_tomography import (ATConfig, FIG11, FIG12,
+                                           build_workflow, make_observations,
+                                           starting_model)
+from repro.core import (CostModel, EmeraldExecutor, MDSS, MigrationManager,
+                        default_tiers, partition)
+from repro.core.tiers import Tier
+
+
+def measure_step_times(cfg: ATConfig, iters: int = 2) -> Dict[str, float]:
+    """Real per-step wall times (local execution) + measured bytes."""
+    obs = make_observations(cfg)
+    tiers = default_tiers()
+    cm = CostModel(tiers)
+    mdss = MDSS(tiers, cost_model=cm)
+    mgr = MigrationManager(tiers, mdss, cm)
+    ex = EmeraldExecutor(partition(build_workflow(cfg)), mgr, policy="never")
+    model = starting_model(cfg)
+    for _ in range(iters):      # includes warmup/compile on iter 1
+        res = ex.run({"model": model, "obs": obs})
+        model = res["model"]
+    times = {}
+    for rep in mgr.reports[-4:]:
+        times[rep.step] = rep.seconds
+    bytes_out = {rep.step: rep.bytes_out for rep in mgr.reports[-4:]}
+    return times, bytes_out
+
+
+def derive_scenarios(cfg: ATConfig, times: Dict[str, float],
+                     bytes_out: Dict[str, int]):
+    """T_local (measured) vs T_offload (derived) under both calibrations.
+
+    The local tier is identified with THIS machine (measured wall times);
+    the cloud runs each step faster by the calibration's peak-FLOPs ratio
+    (paper: ~4x — 25 Azure VMs vs the 10-node cluster; tpu: a 16x16 v5e
+    pod). Transfers use real byte sizes over the calibration's WAN.
+    """
+    n = cfg.nx * cfg.ny * cfg.nz
+    results = {}
+    for mode, tiers in (("paper", paper_tiers()), ("tpu", default_tiers())):
+        cm = CostModel(tiers)
+        speedup = tiers["cloud"].peak_flops / tiers["local"].peak_flops
+
+        def t_exec(step, tier):
+            return times[step] / (speedup if tier == "cloud" else 1.0)
+
+        t_local = sum(t_exec(s, "local") for s in times)
+        # offloaded: step 1 local; steps 2-4 on cloud; model there + back
+        move_in = 8.0 * n            # model upload once per iteration
+        move_out = bytes_out.get("update", 8 * n)   # updated model back
+        t_off = (t_exec("forward", "local")
+                 + cm.transfer_time(move_in, "local", "cloud")
+                 + sum(t_exec(s, "cloud") for s in ("misfit", "kernel",
+                                                    "update"))
+                 + cm.transfer_time(move_out, "cloud", "local"))
+        results[mode] = (t_local, t_off, 1.0 - t_off / t_local)
+    return results
+
+
+def run(cfg: ATConfig, fig: str) -> List[str]:
+    times, bytes_out = measure_step_times(cfg)
+    rows = []
+    for s, t in times.items():
+        rows.append(row(f"{fig}_step_{s}_measured", t, "local CPU wall"))
+    for mode, (t_l, t_o, red) in derive_scenarios(cfg, times, bytes_out).items():
+        rows.append(row(f"{fig}_{mode}_local", t_l, "derived"))
+        rows.append(row(f"{fig}_{mode}_offload", t_o,
+                        f"reduction={red * 100:.1f}%"))
+    return rows
+
+
+def main() -> List[str]:
+    out = []
+    # paper meshes with reduced time axis (CPU-friendly; scaling documented)
+    out += run(ATConfig(nx=104, ny=23, nz=24, nt=120), "fig11")
+    out += run(ATConfig(nx=208, ny=44, nz=46, nt=60), "fig12")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,58 @@
+"""Beyond-paper table: Emerald offloading applied to LM training/serving.
+
+Measures (CPU-real) per-step time and per-step bytes moved for a reduced
+LM trained through the Emerald workflow, under the three policies — the
+system-level counterpart of the paper's Fig 11/12 for this repo's LM
+substrate. Also reports decode-path transfer footprint for serving.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.configs import get_config
+from repro.configs.base import RunConfig, ShapeProfile, reduced
+from repro.launch.serve import Request, Server
+from repro.launch.train import Trainer
+from repro.models.model_zoo import Model
+
+
+def main() -> List[str]:
+    rows = []
+    cfg = reduced(get_config("tinyllama-1.1b"), n_layers=4, d_model=128,
+                  d_ff=256)
+    run = RunConfig(model=cfg, shape=ShapeProfile("b", 128, 8, "train"),
+                    remat="none")
+    for policy in ("never", "annotate", "cost_model"):
+        tr = Trainer(run, policy=policy)
+        tr.fit(3, log_every=0)          # warmup + compile
+        tr.mdss.reset_accounting()
+        t = timeit(lambda: tr.fit(1, log_every=0), warmup=0, iters=5)
+        moved = tr.mdss.total_bytes_moved() / 5
+        rows.append(row(f"lm_train_step_{policy}", t,
+                        f"bytes/step={moved:.0f}"))
+    # serving decode footprint
+    run_s = RunConfig(model=cfg, shape=ShapeProfile("s", 128, 4, "decode"),
+                      remat="none")
+    params = Model(run_s).init_params(jax.random.PRNGKey(0))
+    srv = Server(run_s, params)
+    rng = np.random.default_rng(0)
+    for rid in range(4):
+        srv.submit(Request(rid, rng.integers(0, cfg.vocab_size, 16,
+                                             ).astype(np.int32), max_new=16))
+    import time
+    t0 = time.perf_counter()
+    srv.step_batch()
+    dt = time.perf_counter() - t0
+    rep = srv.transfer_report()
+    toks = srv.stats["tokens_out"] + 4
+    rows.append(row("lm_serve_per_token", dt / max(toks, 1),
+                    f"decode_bytes={sum(rep['bytes_moved'].values())}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

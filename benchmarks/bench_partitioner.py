@@ -1,0 +1,59 @@
+"""Partitioner overhead (paper §3.1): static-analysis latency vs workflow
+size, plus Emerald's per-step runtime overhead over a bare jit call."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import (CostModel, EmeraldExecutor, MDSS, MigrationManager,
+                        Workflow, default_tiers, partition)
+
+
+def big_wf(n: int) -> Workflow:
+    wf = Workflow(f"wf{n}")
+    wf.var("v0")
+    for i in range(n):
+        wf.step(f"s{i}", lambda **kw: {f"v{len(kw)}": 0},
+                inputs=(f"v{i}",), outputs=(f"v{i+1}",),
+                remotable=(i % 2 == 0))
+    return wf
+
+
+def runtime_overhead() -> float:
+    """Emerald dispatch cost per remotable step vs calling the jit directly."""
+    tiers = default_tiers()
+    cm = CostModel(tiers)
+    mdss = MDSS(tiers, cost_model=cm)
+    mgr = MigrationManager(tiers, mdss, cm)
+    wf = Workflow("ov")
+    wf.var("x")
+    fn = lambda x: {"y": x * 2.0}
+    wf.step("s", fn, inputs=("x",), outputs=("y",), remotable=True)
+    ex = EmeraldExecutor(partition(wf), mgr)
+    x = jnp.ones((8,))
+    ex.run({"x": x})                                 # compile warmup
+    t_emerald = timeit(lambda: ex.run({"x": x}), iters=20)
+    jitted = jax.jit(fn)
+    jitted(x=x)
+    t_bare = timeit(lambda: jax.block_until_ready(jitted(x=x)), iters=20)
+    return t_emerald - t_bare
+
+
+def main() -> List[str]:
+    rows = []
+    for n in (10, 100, 500):
+        wf = big_wf(n)
+        t = timeit(lambda: partition(wf), iters=5)
+        rows.append(row(f"partition_{n}_steps", t,
+                        f"{t / n * 1e6:.1f}us/step"))
+    ov = runtime_overhead()
+    rows.append(row("emerald_runtime_overhead_per_step", ov,
+                    "vs bare jit call"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,41 @@
+"""Shared benchmark helpers.
+
+Output convention (benchmarks/run.py): CSV lines ``name,us_per_call,derived``.
+
+Hardware note: this container is a single CPU. Benchmarks therefore measure
+REAL wall times for every step/mechanism on the local tier and use the cost
+model to derive cross-tier scenarios with two calibrations:
+
+  * ``paper``  — the paper's §4 testbed: a 10-node local cluster vs 25
+    Azure D-series VMs (~4x aggregate compute), 1 GB/s WAN. Reproduces the
+    paper's Fig 11/12 methodology with documented hardware substitution.
+  * ``tpu``    — this repo's target: local workstation vs a 16x16 v5e pod.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+from repro.core.tiers import Tier
+
+
+def paper_tiers() -> Dict[str, Tier]:
+    """Calibrated to the paper's evaluation hardware (§4)."""
+    local = Tier("local", chips=10, peak_flops_per_chip=1.5e11,
+                 hbm_bw_per_chip=25e9, link_bw={"cloud": 1e9})
+    cloud = Tier("cloud", chips=25, peak_flops_per_chip=2.4e11,
+                 hbm_bw_per_chip=40e9, link_bw={"local": 1e9})
+    return {"local": local, "cloud": cloud}
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> validate.
+
+Each experiment re-runs a dry-run cell with RunConfig overrides, records
+the three roofline terms, and prints the delta on the dominant term vs the
+cell's baseline. Results land in benchmarks/perf_results/ and are written
+up in EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell tinyllama
+    PYTHONPATH=src python -m benchmarks.hillclimb --list
+"""
+import argparse
+import json
+
+RESULTS = os.path.join(os.path.dirname(__file__), "perf_results")
+
+# ---------------------------------------------------------------------------
+# Experiment definitions: (cell, name, hypothesis, run_overrides)
+# Baselines ran with sharding_preset=fsdp, remat=full (paper-faithful
+# annotate-and-offload system config) — see dryrun_results/*.json.
+# ---------------------------------------------------------------------------
+EXPERIMENTS = {
+    "tinyllama": {
+        "arch": "tinyllama-1.1b", "shape": "train_4k",
+        "steps": [
+            ("zero_dp",
+             "1.1B params are too small for 16-way TP: activation psums "
+             "(8.6GB/dev) and TP memory traffic dominate. Pure ZeRO-3 DP-256 "
+             "replaces them with ~3x2.2GB param all-gathers: collective "
+             "3.11s -> ~0.2s, memory should drop >3x.",
+             {"sharding_preset": "zero_dp"}),
+            ("zero_dp_dots",
+             "With batch=1/device, activations fit without full remat; "
+             "dots_saveable removes the recompute forward: flops -~25%, "
+             "bytes -~20%.",
+             {"sharding_preset": "zero_dp", "remat": "dots_saveable"}),
+            # (invalid) "zero_dp_unroll4": 4 does not divide 22 layers, so
+            # the scan remainder breaks the affine cost extrapolation —
+            # scan_unroll must divide the stage depth.
+            ("zero_dp_dots_unroll2",
+             "Scan-unroll 2 gives XLA a fusion window across layer "
+             "boundaries (bytes down if fusions cross layers).",
+             {"sharding_preset": "zero_dp", "remat": "dots_saveable",
+              "scan_unroll": 2}),
+        ],
+    },
+    "falcon": {
+        "arch": "falcon-mamba-7b", "shape": "train_4k",
+        "steps": [
+            # (refuted) "blocked_scan": hypothesis was that the assoc scan
+            # costs log2(L) passes; measured 99.9->130.7s. jax's
+            # associative_scan is already work-efficient — the real cost is
+            # AUTODIFF THROUGH the scan (~100 tensor passes in bwd).
+            ("cf_vjp",
+             "Replace AD-through-associative-scan with the closed-form "
+             "adjoint (reverse linear scan; custom_vjp). Standalone: "
+             "2.4x fewer flops / 1.7x fewer bytes; in-model it is also "
+             "opaque to remat so the scan is not replayed: memory 99.9s "
+             "-> expect <40s.",
+             {}),
+            ("cf_vjp_zero_dp",
+             "Mamba blocks have no attention; d_inner TP only adds "
+             "collectives (8.3s). ZeRO-3 DP-256 drops them.",
+             {"sharding_preset": "zero_dp"}),
+            ("cf_vjp_zero_dp_dots",
+             "dots_saveable on top: cut the remat replay of projections.",
+             {"sharding_preset": "zero_dp", "remat": "dots_saveable"}),
+            ("cf_vjp_bf16_scan",
+             "The (B,L,d,N) scan tensors dominate the memory term; "
+             "materializing them in bf16 halves that traffic. Measured "
+             "numerics: 4e-3 rel output / 7e-3 rel grad error vs f32 "
+             "(kernel tests).",
+             {"sharding_preset": "zero_dp", "remat": "dots_saveable",
+              "ssm_scan_dtype": "bfloat16"}),
+        ],
+    },
+    "deepseek": {
+        "arch": "deepseek-v3-671b", "shape": "train_4k",
+        "steps": [
+            ("ep256",
+             "HLO diagnosis: 20.7GB/layer combine-scatter ARs + 16.9GB/layer "
+             "expert-matmul partial-sum ARs, both from expert weights "
+             "contracting over the data-sharded embed dim, + 6.4GB MLA ARs "
+             "from TP'ing the latent (q_lora). EP-256 (experts over "
+             "data x model; each device owns whole experts: 88MB resident) "
+             "removes the weight collectives entirely — the token "
+             "all-to-all (~0.5GB/dev/layer) replaces them. Unsharding the "
+             "MLA latent lets heads take the model axis: latent ARs vanish.",
+             {"rule_overrides": (("experts", ("data", "model")),
+                                 ("act_experts", ("data", "model")),
+                                 ("act_moe_group", ()),
+                                 ("q_lora", ()))}),
+            ("ep256_dots",
+             "dots_saveable removes the recompute of dispatch gathers + "
+             "expert matmuls in the backward pass.",
+             {"rule_overrides": (("experts", ("data", "model")),
+                                 ("act_experts", ("data", "model")),
+                                 ("act_moe_group", ()),
+                                 ("q_lora", ())),
+              "remat": "dots_saveable"}),
+            # ep256/ep256_dots REFUTED (coll 150->1535s): auto-SPMD lowers
+            # cross-shard gathers into full all-gathers of capacity buffers.
+            ("manual_ep",
+             "Force the real expert all-to-all: shard_map around the "
+             "expert einsums with explicit jax.lax.all_to_all over "
+             "(data x model) = EP-256; each device owns whole experts "
+             "(88MB resident). Wire bytes ~0.5GB/dev/layer vs the "
+             "baseline's 37GB/layer of weight ARs. Also unshard the MLA "
+             "latent so heads take the model axis.",
+             {"moe_impl": "manual_ep",
+              "rule_overrides": (("experts", ("data", "model")),
+                                 ("act_moe_group", ("data", "model")),
+                                 ("q_lora", ()))}),
+            ("manual_ep_dots",
+             "dots_saveable: no recompute of the all-to-all in backward.",
+             {"moe_impl": "manual_ep",
+              "rule_overrides": (("experts", ("data", "model")),
+                                 ("act_moe_group", ("data", "model")),
+                                 ("q_lora", ())),
+              "remat": "dots_saveable"}),
+            # manual_ep also refuted on this backend (coll 371s): the
+            # auto<->manual boundary reshard of the (G,E,C,D) capacity
+            # buffer replicates it. Keep baseline expert placement; attack
+            # the OTHER diagnosed terms instead:
+            ("latent_dp",
+             "Surgical: (a) unshard the MLA latent (q_lora) so heads take "
+             "the model axis — kills the 6.4GB/layer latent ARs; (b) "
+             "shard batch over all 256 devices (act_batch +model) so every "
+             "TP activation AR shrinks 16x per device.",
+             {"rule_overrides": (("q_lora", ()),
+                                 ("act_batch", ("pod", "data", "model")),
+                                 ("act_moe_group", ("data", "model")))}),
+        ],
+    },
+}
+
+
+def main():
+    # import AFTER the XLA_FLAGS lines at the top
+    from repro.launch.dryrun import run_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(EXPERIMENTS) + ["all"],
+                    default="all")
+    ap.add_argument("--only", default=None, help="run a single step name")
+    args = ap.parse_args()
+    os.makedirs(RESULTS, exist_ok=True)
+
+    cells = list(EXPERIMENTS) if args.cell == "all" else [args.cell]
+    for cell in cells:
+        spec = EXPERIMENTS[cell]
+        base_path = os.path.join(
+            os.path.dirname(__file__), "dryrun_results",
+            f"{spec['arch']}_{spec['shape']}_single.json")
+        base = json.load(open(base_path))
+        b = base["roofline"]
+        print(f"\n=== {cell}: {spec['arch']} x {spec['shape']} ===")
+        print(f"baseline: compute {b['compute_s']:.2f}s memory "
+              f"{b['memory_s']:.2f}s coll {b['collective_s']:.2f}s "
+              f"dominant={b['dominant']} model/hlo={base['model_vs_hlo']:.2f}")
+        for name, hypothesis, overrides in spec["steps"]:
+            if args.only and name != args.only:
+                continue
+            rec = run_cell(spec["arch"], spec["shape"], "single",
+                           run_overrides=overrides)
+            rec["experiment"] = name
+            rec["hypothesis"] = hypothesis
+            out = os.path.join(RESULTS, f"{cell}__{name}.json")
+            json.dump(rec, open(out, "w"), indent=1)
+            if not rec.get("ok"):
+                print(f"  {name}: FAIL {rec['error'][:120]}")
+                continue
+            r = rec["roofline"]
+            print(f"  {name}: compute {r['compute_s']:.2f}s memory "
+                  f"{r['memory_s']:.2f}s coll {r['collective_s']:.2f}s "
+                  f"dominant={r['dominant']} bound {b['bound_s']:.2f}->"
+                  f"{r['bound_s']:.2f}s  model/hlo={rec['model_vs_hlo']:.2f}"
+                  f"  ({rec['wall_s']}s)")
+
+
+if __name__ == "__main__":
+    main()

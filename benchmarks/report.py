@@ -1,0 +1,102 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir benchmarks/dryrun_results]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCH_IDS
+from repro.configs.base import SHAPES
+
+DIR = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+
+def load(dir_):
+    recs = {}
+    for f in glob.glob(os.path.join(dir_, "*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_bytes(n):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def dryrun_table(recs, mesh):
+    out = ["| arch | shape | status | HBM/dev (args+tmp) | per-dev GFLOPs | coll GB/dev | wall(s) |",
+           "|---|---|---|---|---|---|---|"]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                out.append(f"| {arch} | {shape} | MISSING | | | | |")
+            elif r.get("skipped"):
+                out.append(f"| {arch} | {shape} | skip (long_500k needs "
+                           f"sub-quadratic attn) | | | | |")
+            elif not r.get("ok"):
+                out.append(f"| {arch} | {shape} | **FAIL** {r['error'][:60]}"
+                           f" | | | | |")
+            else:
+                m = r["memory"]
+                hbm = fmt_bytes(m["argument_bytes"] + m["temp_bytes"])
+                pd = r["per_device"]
+                out.append(
+                    f"| {arch} | {shape} | ok | {hbm} "
+                    f"| {pd['flops']/1e9:.0f} | {pd['collective_bytes']/1e9:.2f}"
+                    f" | {r['wall_s']} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs):
+    out = ["| arch | shape | compute(ms) | memory(ms) | collective(ms) | "
+           "dominant | MODEL/HLO | MODEL_FLOPS |",
+           "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, "single"))
+            if not r or not r.get("ok"):
+                continue
+            t = r["roofline"]
+            out.append(
+                f"| {arch} | {shape} | {t['compute_s']*1e3:.1f} "
+                f"| {t['memory_s']*1e3:.1f} | {t['collective_s']*1e3:.1f} "
+                f"| **{t['dominant'].replace('_s','')}** "
+                f"| {r['model_vs_hlo']:.2f} | {r['model_flops']:.2e} |")
+    return "\n".join(out)
+
+
+def summary(recs):
+    ok = sum(1 for r in recs.values() if r.get("ok"))
+    skip = sum(1 for r in recs.values() if r.get("skipped"))
+    fail = sum(1 for r in recs.values()
+               if not r.get("ok") and not r.get("skipped"))
+    return f"{ok} compiled, {skip} skipped (documented), {fail} failed"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DIR)
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Summary\n")
+    print(summary(recs))
+    print("\n## Dry-run (single pod 16x16 = 256 chips)\n")
+    print(dryrun_table(recs, "single"))
+    print("\n## Dry-run (multi-pod 2x16x16 = 512 chips)\n")
+    print(dryrun_table(recs, "multi"))
+    print("\n## Roofline (single pod; v5e: 197TF/s bf16, 819GB/s HBM, "
+          "50GB/s link)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

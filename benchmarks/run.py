@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  bench_at               Fig 11 + Fig 12 (AT exec time, offload off/on)
+  bench_mdss             §3.4 / Fig 10   (MDSS transfer reduction)
+  bench_parallel_offload Fig 9           (concurrent offloading)
+  bench_partitioner      §3.1            (partitioner + runtime overhead)
+  bench_lm_workflow      beyond-paper    (LM train/serve through Emerald)
+
+Prints ``name,us_per_call,derived`` CSV. Roofline numbers come from the
+dry-run (see launch/dryrun.py), not from here — this container's CPU wall
+times say nothing about TPU performance.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_at, bench_lm_workflow, bench_mdss,
+                            bench_parallel_offload, bench_partitioner)
+    modules = [
+        ("bench_mdss", bench_mdss),
+        ("bench_parallel_offload", bench_parallel_offload),
+        ("bench_partitioner", bench_partitioner),
+        ("bench_at", bench_at),
+        ("bench_lm_workflow", bench_lm_workflow),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            for line in mod.main():
+                print(line, flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name}_FAILED,0,{type(e).__name__}: {e}", flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

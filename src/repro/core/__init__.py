@@ -1,0 +1,11 @@
+"""Emerald core: the paper's contribution as a composable JAX runtime."""
+from repro.core.workflow import Step, Workflow, WorkflowError, remotable  # noqa: F401
+from repro.core.partitioner import (MigrationPoint, PartitionError,  # noqa: F401
+                                    PartitionedWorkflow, partition)
+from repro.core.mdss import MDSS, Transport, nbytes_of  # noqa: F401
+from repro.core.migration import MigrationManager, StepFailure  # noqa: F401
+from repro.core.executor import EmeraldExecutor, WorkflowFailure  # noqa: F401
+from repro.core.cost_model import CostModel, StepStats  # noqa: F401
+from repro.core.scheduler import (AnnotatePolicy, CostModelPolicy,  # noqa: F401
+                                  NeverPolicy, make_policy)
+from repro.core.tiers import Tier, default_tiers  # noqa: F401

@@ -1,0 +1,81 @@
+"""Roofline cost model for offload decisions (beyond-paper feature).
+
+The paper decides offloading purely by developer annotation and lists
+"offloading decisions" as an open issue. This model estimates, per step and
+tier:
+
+    t_exec(step, tier)  = max(flops / peak_flops, bytes / hbm_bw)
+    t_move(n, src, dst) = latency + n / bw(src, dst)
+
+and recommends offloading a remotable step iff
+
+    t_exec(local) > t_move(stale_in) + t_exec(cloud) + t_move(results_back)
+
+where ``stale_in`` counts ONLY input bytes whose latest version is not
+already resident on the target tier — exactly the saving MDSS exists to
+create (paper §3.4: task-code-only transfer when data is fresh).
+
+Step FLOP/byte statistics come from three sources, best-first:
+  1. measured EMA of past executions on a tier (runtime feedback),
+  2. XLA ``cost_analysis`` captured when the migration manager compiles the
+     step for a tier,
+  3. developer hints on the Step (``flops_hint`` / ``bytes_hint``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.tiers import Tier
+
+
+@dataclass
+class StepStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    measured_s: Dict[str, float] = field(default_factory=dict)  # tier -> EMA
+
+    def observe(self, tier: str, seconds: float, alpha: float = 0.5):
+        prev = self.measured_s.get(tier)
+        self.measured_s[tier] = seconds if prev is None else (
+            alpha * seconds + (1 - alpha) * prev)
+
+
+class CostModel:
+    def __init__(self, tiers: Dict[str, Tier]):
+        self.tiers = tiers
+        self.stats: Dict[str, StepStats] = {}
+
+    def stats_for(self, step_name: str) -> StepStats:
+        return self.stats.setdefault(step_name, StepStats())
+
+    # ------------------------------------------------------------- estimates
+    def exec_time(self, step, tier_name: str) -> float:
+        tier = self.tiers[tier_name]
+        st = self.stats_for(step.name)
+        if tier_name in st.measured_s:
+            return st.measured_s[tier_name]
+        flops = st.flops or step.flops_hint
+        byts = st.bytes_accessed or step.bytes_hint
+        if not flops and not byts:
+            return 0.0  # unknown -> neutral
+        return max(flops / tier.peak_flops, byts / tier.hbm_bw)
+
+    def transfer_time(self, nbytes: float, src: str, dst: str) -> float:
+        if src == dst or nbytes == 0:
+            return 0.0
+        tier = self.tiers[src]
+        return tier.link_latency_s + nbytes / tier.bw_to(dst)
+
+    def offload_benefit(self, step, *, stale_in_bytes: float,
+                        result_bytes: float, src: str = "local",
+                        dst: str = "cloud") -> float:
+        """Seconds saved by offloading (negative -> keep local)."""
+        t_local = self.exec_time(step, src)
+        t_remote = (self.transfer_time(stale_in_bytes, src, dst)
+                    + self.exec_time(step, dst)
+                    + self.transfer_time(result_bytes, dst, src))
+        return t_local - t_remote
+
+    def should_offload(self, step, **kw) -> bool:
+        return self.offload_benefit(step, **kw) > 0.0

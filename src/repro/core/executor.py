@@ -1,0 +1,214 @@
+"""Emerald distributed-execution runtime (paper §3.3 + §6-scale features).
+
+Walks a partitioned workflow's dataflow DAG:
+
+  * non-remotable steps run on the local tier,
+  * at a migration point the workflow *suspends*, the target step offloads
+    through the MigrationManager, then execution *resumes* — strictly
+    alternating (Property 3),
+  * independent remotable steps offload **concurrently** (paper Fig 9b)
+    via a thread pool,
+  * offload policy: ``annotate`` (paper-faithful: every remotable step goes
+    to the cloud), ``cost_model`` (beyond-paper: offload only when the
+    roofline model predicts benefit), ``never`` (paper's baseline arm).
+
+Scale features (DESIGN.md §6):
+  * retry with tier fallback — a failed offload re-runs, ultimately locally,
+  * straggler speculation — a remotable step that overruns
+    ``speculate_after`` x its EMA runtime is duplicated on another tier;
+    first finisher wins,
+  * suspension points double as workflow checkpoints (crash -> resume skips
+    completed steps; variables restored from the snapshot).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.mdss import MDSS, nbytes_of
+from repro.core.migration import MigrationManager, StepFailure
+from repro.core.partitioner import PartitionedWorkflow
+from repro.core.scheduler import make_policy
+from repro.core.workflow import Step
+
+
+@dataclass
+class Event:
+    kind: str          # suspend | offload | resume | local | retry | speculate | checkpoint
+    step: str
+    tier: str = ""
+    t: float = 0.0
+    info: dict = field(default_factory=dict)
+
+
+class WorkflowFailure(RuntimeError):
+    pass
+
+
+class EmeraldExecutor:
+    def __init__(self, pwf: PartitionedWorkflow, manager: MigrationManager,
+                 *, policy: str = "annotate", cloud_tier: str = "cloud",
+                 max_workers: int = 8, speculate_after: Optional[float] = None,
+                 checkpoint_dir: Optional[str] = None):
+        assert policy in ("annotate", "cost_model", "never")
+        self.pwf = pwf
+        self.wf = pwf.workflow
+        self.manager = manager
+        self.mdss = manager.mdss
+        self.policy = policy
+        self._policy = make_policy(policy, manager.cost_model, manager.mdss,
+                                   cloud_tier)
+        self.cloud_tier = cloud_tier
+        self.max_workers = max_workers
+        self.speculate_after = speculate_after
+        self.checkpoint_dir = checkpoint_dir
+        self.events: List[Event] = []
+        self._lock = threading.Lock()
+
+    # ---------------------------------------------------------------- events
+    def _emit(self, kind, step, tier="", **info):
+        with self._lock:
+            self.events.append(Event(kind, step, tier, time.perf_counter(), info))
+
+    # ------------------------------------------------------------ checkpoint
+    def _ckpt_path(self):
+        return os.path.join(self.checkpoint_dir, f"{self.wf.name}.wfckpt")
+
+    def _save_checkpoint(self, completed):
+        if not self.checkpoint_dir:
+            return
+        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        snapshot = {}
+        for uri in self.wf.variables:
+            if self.mdss.version(uri):
+                val = self.mdss.get(uri, "local")
+                snapshot[uri] = jax.tree.map(np.asarray, val)
+        tmp = self._ckpt_path() + ".tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump({"completed": sorted(completed), "vars": snapshot}, f)
+        os.replace(tmp, self._ckpt_path())
+        self._emit("checkpoint", "<workflow>", info={"n": len(completed)})
+
+    def _load_checkpoint(self):
+        if not self.checkpoint_dir or not os.path.exists(self._ckpt_path()):
+            return None
+        with open(self._ckpt_path(), "rb") as f:
+            return pickle.load(f)
+
+    # ------------------------------------------------------------------- run
+    def run(self, init_vars: Dict[str, Any], *, resume: bool = False,
+            fetch=None):
+        """Execute the workflow.
+
+        ``fetch`` limits which variables are synced back to the local tier
+        at re-integration (default: all). Leaving hot state (params,
+        optimizer state) un-fetched keeps it resident on the cloud tier so
+        the next run's offloads are code-only — the paper's MDSS saving.
+        """
+        return self._run(init_vars, resume=resume, fetch=fetch)
+
+    def _run(self, init_vars: Dict[str, Any], *, resume: bool = False,
+             fetch=None):
+        completed: set = set()
+        for uri, val in init_vars.items():
+            if uri not in self.wf.variables:
+                self.wf.var(uri)
+            self.mdss.put(uri, val, tier="local")
+        if resume:
+            state = self._load_checkpoint()
+            if state is not None:
+                completed = set(state["completed"])
+                for uri, val in state["vars"].items():
+                    self.mdss.put(uri, val, tier="local")
+
+        deps = self.wf.dependencies()
+        steps = {s.name: s for s in self.wf.toplevel()}
+        pool = ThreadPoolExecutor(max_workers=self.max_workers)
+        try:
+            while len(completed) < len(steps):
+                ready = [steps[n] for n in self.wf.order
+                         if n in steps and n not in completed
+                         and deps[n] <= completed]
+                if not ready:
+                    raise WorkflowFailure("dependency cycle or failed step")
+                futures: Dict[Future, Step] = {}
+                for s in ready:
+                    if self._should_offload(s):
+                        self._emit("suspend", s.name)
+                        futures[pool.submit(self._offload_with_recovery, s)] = s
+                    else:
+                        self._run_local(s)
+                        completed.add(s.name)
+                for fut, s in futures.items():
+                    fut.result()  # re-raises WorkflowFailure
+                    self._emit("resume", s.name)
+                    completed.add(s.name)
+                if futures or not ready:
+                    self._save_checkpoint(completed)
+        finally:
+            pool.shutdown(wait=True)
+        # re-integrate: requested workflow variables synced back to local
+        uris = fetch if fetch is not None else [
+            u for u in self.wf.variables if self.mdss.version(u)]
+        return {uri: self.mdss.get(uri, "local") for uri in uris
+                if self.mdss.version(uri)}
+
+    # -------------------------------------------------------------- policies
+    def _should_offload(self, s: Step) -> bool:
+        return self._policy.should_offload(s)
+
+    # ------------------------------------------------------------- execution
+    def _run_local(self, s: Step):
+        rep = self.manager.execute(s, "local")
+        self._emit("local", s.name, "local", seconds=rep.seconds)
+
+    def _offload_with_recovery(self, s: Step):
+        tiers_to_try = [self.cloud_tier] * max(1, s.retries) + ["local"]
+        last_err = None
+        for attempt, tier in enumerate(tiers_to_try):
+            try:
+                rep = self._execute_maybe_speculative(s, tier)
+                self._emit("offload", s.name, rep.tier,
+                           seconds=rep.seconds, bytes_in=rep.bytes_in,
+                           bytes_out=rep.bytes_out, code_only=rep.code_only,
+                           attempt=attempt)
+                return rep
+            except StepFailure as e:      # node failure -> retry / fallback
+                last_err = e
+                self._emit("retry", s.name, tier, attempt=attempt,
+                           error=str(e))
+        raise WorkflowFailure(f"step {s.name} failed on all tiers: {last_err}")
+
+    def _execute_maybe_speculative(self, s: Step, tier: str):
+        alt = self._alternate_tier(tier)
+        est = self.manager.cost_model.stats_for(s.name).measured_s.get(tier)
+        if self.speculate_after is None or alt is None or est is None:
+            return self.manager.execute(s, tier)
+        timeout = est * self.speculate_after
+        # no context manager: pool shutdown must NOT join the straggler
+        spool = ThreadPoolExecutor(max_workers=2)
+        try:
+            primary = spool.submit(self.manager.execute, s, tier)
+            done, _ = wait([primary], timeout=timeout)
+            if done:
+                return primary.result()
+            self._emit("speculate", s.name, alt, timeout=timeout)
+            backup = spool.submit(self.manager.execute, s, alt)
+            done, _ = wait([primary, backup], return_when=FIRST_COMPLETED)
+            return done.pop().result()
+        finally:
+            spool.shutdown(wait=False)
+
+    def _alternate_tier(self, tier: str) -> Optional[str]:
+        for name in self.manager.tiers:
+            if name not in (tier, "local"):
+                return name
+        return None

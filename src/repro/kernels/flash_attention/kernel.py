@@ -1,0 +1,108 @@
+"""Pallas TPU flash-attention forward kernel (blockwise online softmax).
+
+Layout: inputs are pre-transposed to head-major — q (B,H,Sq,dq),
+k/v (B,KV,Skv,d*) — so each grid step streams one (Bq x d) query tile
+against (Bk x d) key/value tiles held in VMEM. Grid = (B, H, nq, nk) with
+the kv dim innermost; the running max / denominator / accumulator live in
+VMEM scratch across kv steps (TPU grid execution is sequential).
+
+Block sizes are MXU-aligned (128 multiples); ``ops.py`` pads seq/head dims.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, block_q: int, block_k: int,
+               kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # causal: skip kv blocks strictly above the diagonal
+    run = (k_start <= q_start + block_q - 1) if causal else True
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (Bq, dq)
+        k = k_ref[0, 0].astype(jnp.float32)            # (Bk, dq)
+        v = v_ref[0, 0].astype(jnp.float32)            # (Bk, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, scale: float, causal: bool = True,
+                        kv_len: int | None = None,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False):
+    """q: (B,H,Sq,dq), k: (B,KV,Skv,dq), v: (B,KV,Skv,dv) -> (B,H,Sq,dv).
+
+    Caller guarantees Sq % block_q == 0, Skv % block_k == 0 and dq/dv are
+    lane-aligned (ops.py pads).
+    """
+    B, H, Sq, dq = q.shape
+    _, KV, Skv, dv = v.shape
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    nq, nk = Sq // block_q, Skv // block_k
+    kv_len = Skv if kv_len is None else kv_len
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dq), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, dq), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, dv), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dv), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # running max
+            pltpu.VMEM((block_q,), jnp.float32),        # running denom
+            pltpu.VMEM((block_q, dv), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for flash attention (GQA, causal or full).
+
+Two implementations:
+  * ``attention_ref``          — direct (materializes S_q x S_kv scores);
+    the oracle for kernel tests and the small-seq path.
+  * ``attention_ref_chunked``  — q-chunked streaming with causal KV
+    truncation per chunk: peak score memory is q_chunk x S_kv and causal
+    chunks only read KV up to their diagonal, so compiled FLOPs/memory
+    match what the Pallas kernel does on TPU. The chunk loop is a *python*
+    loop (unrolled in HLO) so ``cost_analysis`` counts every chunk
+    (see DESIGN.md on scan trip-count accounting).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale: float, causal: bool = True,
+                  kv_len=None):
+    """q: (B,Sq,H,dq) k: (B,Skv,KV,dq) v: (B,Skv,KV,dv) -> (B,Sq,H,dv).
+
+    Sq == Skv when causal (positions aligned); grouped so KV never expands.
+    """
+    B, Sq, H, dq = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dq)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(k.shape[1])
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if kv_len is not None:
+        ok = ok & (k_pos[None, :] < kv_len)
+    if causal:
+        q_pos = jnp.arange(Sq)
+        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskv->bqkgv", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, -1)
+
+
+def attention_ref_chunked(q, k, v, *, scale: float, causal: bool = True,
+                          q_chunk: int = 512):
+    """Streaming attention; same signature/semantics as ``attention_ref``."""
+    B, Sq, H, dq = q.shape
+    Skv = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    outs = []
+    for q0 in range(0, Sq, q_chunk):
+        qc = min(q_chunk, Sq - q0)
+        # causal: this chunk only attends to keys [0, q0+qc)
+        kv_end = min(q0 + qc, Skv) if causal else Skv
+        qg = q[:, q0:q0 + qc].reshape(B, qc, KV, G, dq)
+        ks, vs = k[:, :kv_end], v[:, :kv_end]
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ks,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = q0 + jnp.arange(qc)
+            k_pos = jnp.arange(kv_end)
+            s = jnp.where((k_pos[None, :] <= q_pos[:, None])[None, None, None],
+                          s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskv->bqkgv", p.astype(v.dtype), vs)
+        outs.append(o.reshape(B, qc, H, -1))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]

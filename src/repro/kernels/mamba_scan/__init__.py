@@ -1,0 +1,1 @@
+from repro.kernels.mamba_scan.ops import selective_scan  # noqa: F401

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the Mamba-1 selective scan.
+
+TPU adaptation (vs. the CUDA selective-scan): the sequence is chunked on the
+*grid* — grid = (B, n_dblocks, n_chunks) with chunks innermost so the SSM
+state for one (batch, channel-block) stays resident in VMEM scratch across
+chunk steps; within a chunk the recurrence runs as a ``fori_loop`` over
+timesteps on (bd, N) tiles. Channels are blocked (``block_d``) so the
+working set (chunk x bd inputs + bd x N state) fits VMEM.
+
+NOTE on layout: N (ssm state, typically 16) rides the lane dim; production
+tuning would pad N->128 or interleave channels into lanes. Correctness is
+validated in interpret mode (this container is CPU-only).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                 y_ref, hlast_ref, h_scr, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)      # (bd, N)
+
+    A = a_ref[...].astype(jnp.float32)                  # (bd, N)
+    Dv = d_ref[...].astype(jnp.float32)                 # (bd,)
+
+    def body(t, h):
+        xt = x_ref[0, t, :].astype(jnp.float32)         # (bd,)
+        dtt = dt_ref[0, t, :].astype(jnp.float32)       # (bd,)
+        Bt = b_ref[0, t, :].astype(jnp.float32)         # (N,)
+        Ct = c_ref[0, t, :].astype(jnp.float32)         # (N,)
+        h = jnp.exp(dtt[:, None] * A) * h + (dtt * xt)[:, None] * Bt[None, :]
+        yt = jnp.sum(h * Ct[None, :], axis=1) + Dv * xt
+        y_ref[0, pl.dslice(t, 1), :] = yt[None].astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, body, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        hlast_ref[0] = h.astype(hlast_ref.dtype)
+
+
+def selective_scan_fwd(x, dt, A, B, C, D, h0, *, chunk: int = 512,
+                       block_d: int = 512, interpret: bool = False):
+    """Shapes as in ref.selective_scan_ref. Returns (y, h_last)."""
+    Bt, L, di = x.shape
+    N = A.shape[1]
+    chunk = min(chunk, L)
+    block_d = min(block_d, di)
+    assert L % chunk == 0 and di % block_d == 0
+    grid = (Bt, di // block_d, L // chunk)
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),  # x
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),  # dt
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),            # A
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),        # B
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),        # C
+            pl.BlockSpec((block_d,), lambda b, d, c: (d,)),                # D
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),      # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, L, di), x.dtype),
+            jax.ShapeDtypeStruct((Bt, di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D, h0)
+    return y, h_last

@@ -1,0 +1,166 @@
+"""Batched serving: prefill + decode loop as Emerald remotable steps.
+
+A miniature continuous-batching server:
+
+  * requests (token prompts) queue up; the scheduler packs up to
+    ``max_batch`` into a slot-based batch,
+  * ``prefill`` (remotable) builds the KV caches on the serving tier,
+  * ``decode`` (remotable) advances every active slot one token per call;
+    finished slots (EOS or length budget) free up,
+  * params + caches stay resident on the serving tier via MDSS — decode
+    offloads are code-only; only the sampled tokens cross the link.
+
+CLI demo (CPU-sized):
+  python -m repro.launch.serve --arch tinyllama-1.1b --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, RunConfig, ShapeProfile, reduced
+from repro.core import (CostModel, EmeraldExecutor, MDSS, MigrationManager,
+                        Workflow, default_tiers, partition)
+from repro.models.model_zoo import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new: int = 16
+    tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    def __init__(self, run: RunConfig, params, *, policy: str = "annotate",
+                 max_batch: Optional[int] = None):
+        self.run = run
+        self.model = Model(run)
+        self.max_batch = max_batch or run.shape.global_batch
+        self.tiers = default_tiers()
+        self.cost_model = CostModel(self.tiers)
+        self.mdss = MDSS(self.tiers, cost_model=self.cost_model)
+        self.manager = MigrationManager(self.tiers, self.mdss, self.cost_model)
+        self._build_workflows()
+        self.params = params
+        self.queue: List[Request] = []
+        self.stats = {"prefills": 0, "decode_calls": 0, "tokens_out": 0}
+
+    def _build_workflows(self):
+        prefill, decode = self.model.prefill, self.model.decode_step
+
+        def prefill_fn(params, batch, cache):
+            logits, cache = prefill(params, batch, cache)
+            return {"logits": logits, "cache": cache}
+
+        def decode_fn(params, tokens, cache):
+            logits, cache = decode(params, tokens, cache)
+            return {"logits": logits, "cache": cache}
+
+        wfp = Workflow("serve-prefill")
+        for v in ("params", "batch", "cache"):
+            wfp.var(v)
+        wfp.step("prefill", prefill_fn, inputs=("params", "batch", "cache"),
+                 outputs=("logits", "cache"), remotable=True)
+        wfd = Workflow("serve-decode")
+        for v in ("params", "tokens", "cache"):
+            wfd.var(v)
+        wfd.step("decode", decode_fn, inputs=("params", "tokens", "cache"),
+                 outputs=("logits", "cache"), remotable=True)
+        self.ex_prefill = EmeraldExecutor(partition(wfp), self.manager)
+        self.ex_decode = EmeraldExecutor(partition(wfd), self.manager)
+
+    # ------------------------------------------------------------------ api
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _pack(self, reqs: List[Request]):
+        """Left-pad-free packing: common prefix length = min prompt len."""
+        B = self.max_batch
+        plen = min(len(r.prompt) for r in reqs)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i] = r.prompt[:plen]
+        return jnp.asarray(toks), plen
+
+    def step_batch(self) -> List[Request]:
+        """Serve one packed batch from the queue to completion."""
+        if not self.queue:
+            return []
+        reqs = self.queue[: self.max_batch]
+        self.queue = self.queue[self.max_batch:]
+        toks, plen = self._pack(reqs)
+        out = self.ex_prefill.run(
+            {"params": self.params, "batch": {"tokens": toks},
+             "cache": self.model.init_cache()},
+            fetch=("logits",))
+        self.stats["prefills"] += 1
+        last = jnp.argmax(out["logits"], -1)
+        for i, r in enumerate(reqs):
+            r.tokens.append(int(last[i]))
+        max_new = max(r.max_new for r in reqs)
+        budget = min(max_new - 1, self.run.shape.seq_len - plen - 1)
+        for _ in range(budget):
+            out = self.ex_decode.run({"tokens": last}, fetch=("logits",))
+            self.stats["decode_calls"] += 1
+            last = jnp.argmax(out["logits"], -1)
+            for i, r in enumerate(reqs):
+                if not r.done and len(r.tokens) < r.max_new:
+                    r.tokens.append(int(last[i]))
+                    self.stats["tokens_out"] += 1
+                else:
+                    r.done = True
+            if all(r.done or len(r.tokens) >= r.max_new for r in reqs):
+                break
+        for r in reqs:
+            r.done = True
+        return reqs
+
+    def transfer_report(self) -> Dict:
+        offloads = [e for e in self.ex_decode.events if e.kind == "offload"]
+        return {"decode_offloads": len(offloads),
+                "decode_code_only": sum(1 for e in offloads
+                                        if e.info.get("code_only")),
+                "bytes_moved": dict(self.mdss.bytes_moved)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch)) if args.reduced else get_config(args.arch)
+    run = RunConfig(model=cfg, shape=ShapeProfile("serve", 128, 4, "decode"),
+                    remat="none")
+    model = Model(run)
+    params = model.init_params(jax.random.PRNGKey(0))
+    srv = Server(run, params)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        srv.submit(Request(rid, rng.integers(
+            0, cfg.vocab_size, rng.integers(8, 32)).astype(np.int32),
+            max_new=args.max_new))
+    t0 = time.time()
+    done: List[Request] = []
+    while srv.queue:
+        done += srv.step_batch()
+    dt = time.time() - t0
+    for r in done:
+        print(f"req {r.rid}: {len(r.tokens)} tokens -> {r.tokens[:8]}...")
+    print(f"{srv.stats} in {dt:.2f}s; transfers: {srv.transfer_report()}")
+
+
+if __name__ == "__main__":
+    main()

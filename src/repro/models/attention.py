@@ -1,0 +1,281 @@
+"""Attention: GQA (with sharding-driven head padding) and MLA.
+
+Two execution modes:
+  * ``full``   — train / prefill over a whole sequence (uses the flash
+    attention kernel path via ``repro.kernels.flash_attention.ops``).
+  * ``decode`` — one token against a preallocated KV cache whose *sequence*
+    dim is sharded (flash-decoding layout; see DESIGN.md §5).
+
+Head padding: q-heads are zero-padded to ``cfg.heads_padded`` (multiple of
+the model axis) and kv-heads to the smallest divisor of that count. Padded
+heads are live parameters — the model is the assigned arch plus a few extra
+heads; the MODEL_FLOPS/HLO_FLOPs roofline ratio accounts for the waste.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import adt, apply_rope, rmsnorm, rmsnorm_template, rope_freqs
+from repro.models.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Shared attention math (grouped einsum; no KV expansion).
+# ---------------------------------------------------------------------------
+
+def attend(q, k, v, *, q_pos, kv_len: int, scale: float, rules, causal=True):
+    """q: (B,Sq,H,dq) k: (B,Skv,KV,dq) v: (B,Skv,KV,dv) -> (B,Sq,H,dv).
+
+    ``q_pos``: (Sq,) absolute positions of queries; keys occupy [0, Skv) and
+    only positions ``<= q_pos`` and ``< kv_len`` are visible.
+    """
+    B, Sq, H, dq = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dq)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(k.shape[1])
+    ok = k_pos[None, :] < kv_len
+    if causal:
+        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskv->bqkgv", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, -1)
+
+
+def _flash_or_ref(cfg, q, k, v, scale, rules, causal=True):
+    """Full-sequence attention; Pallas flash kernel on TPU."""
+    from repro.kernels.flash_attention import ops as fops
+    return fops.flash_attention(q, k, v, scale=scale, causal=causal)
+
+
+# ===========================================================================
+# GQA
+# ===========================================================================
+
+def gqa_template(cfg: ModelConfig) -> dict:
+    d, hp, kvp, hd = cfg.d_model, cfg.heads_padded, cfg.kv_heads_padded, cfg.hdim
+    t = {
+        "wq": ParamSpec((d, hp, hd), ("embed", "heads", "head_dim"), fan_in_axis=0),
+        "wk": ParamSpec((d, kvp, hd), ("embed", "kv_heads", "head_dim"), fan_in_axis=0),
+        "wv": ParamSpec((d, kvp, hd), ("embed", "kv_heads", "head_dim"), fan_in_axis=0),
+        "wo": ParamSpec((hp, hd, d), ("heads", "head_dim", "embed"), fan_in_axis=1),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = ParamSpec((hp, hd), ("heads", "head_dim"), init="zeros")
+        t["bk"] = ParamSpec((kvp, hd), ("kv_heads", "head_dim"), init="zeros")
+        t["bv"] = ParamSpec((kvp, hd), ("kv_heads", "head_dim"), init="zeros")
+    return t
+
+
+def _qkv(cfg, p, x, positions, rules):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    cos, sin = rope_freqs(cfg, cfg.hdim, positions)   # (..., hd/2)
+    q = apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+    k = apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
+    q = constrain(q, rules, "act_batch", None, "act_heads", None)
+    k = constrain(k, rules, "act_batch", None, "act_kv_heads", None)
+    return q, k, v
+
+
+def gqa_full(cfg: ModelConfig, p, x, rules, *, cache: Optional[dict] = None,
+             causal: bool = True):
+    """Train / prefill. If ``cache`` is given it is filled (prefill)."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q, k, v = _qkv(cfg, p, x, positions, rules)
+    scale = cfg.hdim ** -0.5
+    o = _flash_or_ref(cfg, q, k, v, scale, rules, causal=causal)
+    o = constrain(o, rules, "act_batch", None, "act_heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if cache is not None:
+        Sc = cache["k"].shape[1]
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+        cache = dict(cache, k=kc, v=vc, pos=jnp.int32(S))
+    return out, cache
+
+
+def gqa_decode(cfg: ModelConfig, p, x, cache, rules):
+    """x: (B,1,D); cache k/v: (B,Scache,KV,hd) seq-sharded; pos scalar."""
+    B = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k, v = _qkv(cfg, p, x, positions, rules)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    kc = constrain(kc, rules, "act_batch", "act_kv_seq", "act_kv_heads", None)
+    vc = constrain(vc, rules, "act_batch", "act_kv_seq", "act_kv_heads", None)
+    o = attend(q, kc.astype(q.dtype), vc.astype(q.dtype),
+               q_pos=pos[None], kv_len=pos + 1, scale=cfg.hdim ** -0.5,
+               rules=rules)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, dict(cache, k=kc, v=vc, pos=pos + 1)
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, seq: int):
+    """Abstract KV-cache entry + logical axes (for sharding + allocation)."""
+    kvp, hd = cfg.kv_heads_padded, cfg.hdim
+    dt = jnp.dtype(cfg.dtype)
+    val = {
+        "k": jax.ShapeDtypeStruct((batch, seq, kvp, hd), dt),
+        "v": jax.ShapeDtypeStruct((batch, seq, kvp, hd), dt),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    axes = {
+        "k": ("act_batch", "act_kv_seq", "act_kv_heads", None),
+        "v": ("act_batch", "act_kv_seq", "act_kv_heads", None),
+        "pos": (),
+    }
+    return val, axes
+
+
+# ===========================================================================
+# MLA (minicpm3, deepseek-v3)
+# ===========================================================================
+
+def mla_template(cfg: ModelConfig) -> dict:
+    d, hp = cfg.d_model, cfg.heads_padded
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wdq": ParamSpec((d, ql), ("embed", "q_lora"), fan_in_axis=0),
+        "q_norm": rmsnorm_template(ql),
+        "wuq": ParamSpec((ql, hp, dn + dr), ("q_lora", "heads", "head_dim"), fan_in_axis=0),
+        "wdkv": ParamSpec((d, kl + dr), ("embed", "kv_lora"), fan_in_axis=0),
+        "kv_norm": rmsnorm_template(kl),
+        "wuk": ParamSpec((kl, hp, dn), ("kv_lora", "heads", "head_dim"), fan_in_axis=0),
+        "wuv": ParamSpec((kl, hp, dv), ("kv_lora", "heads", "head_dim"), fan_in_axis=0),
+        "wo": ParamSpec((hp, dv, d), ("heads", "head_dim", "embed"), fan_in_axis=1),
+    }
+
+
+def _mla_q(cfg, p, x, positions, rules):
+    cq = rmsnorm(cfg, p["q_norm"], x @ p["wdq"])
+    qh = jnp.einsum("bsl,lhk->bshk", cq, p["wuq"])
+    qn, qr = qh[..., : cfg.qk_nope_head_dim], qh[..., cfg.qk_nope_head_dim :]
+    cos, sin = rope_freqs(cfg, cfg.qk_rope_head_dim, positions)
+    qr = apply_rope(qr, cos[:, :, None, :], sin[:, :, None, :])
+    return constrain(qn, rules, "act_batch", None, "act_heads", None), \
+           constrain(qr, rules, "act_batch", None, "act_heads", None)
+
+
+def _mla_kv_latent(cfg, p, x, positions):
+    kl = cfg.kv_lora_rank
+    dkv = x @ p["wdkv"]
+    ckv = rmsnorm(cfg, p["kv_norm"], dkv[..., :kl])
+    kr = dkv[..., kl:]
+    cos, sin = rope_freqs(cfg, cfg.qk_rope_head_dim, positions)
+    kr = apply_rope(kr, cos, sin)
+    return ckv, kr
+
+
+def mla_full(cfg: ModelConfig, p, x, rules, *, cache: Optional[dict] = None):
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    qn, qr = _mla_q(cfg, p, x, positions, rules)
+    ckv, kr = _mla_kv_latent(cfg, p, x, positions)
+    # expand k, v from the latent (train/prefill path)
+    kn = jnp.einsum("bsl,lhk->bshk", ckv, p["wuk"])
+    v = jnp.einsum("bsl,lhv->bshv", ckv, p["wuv"])
+    hp = cfg.heads_padded
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None, :], kn.shape[:3] + (cfg.qk_rope_head_dim,))], axis=-1)
+    q = jnp.concatenate([qn, qr], axis=-1)
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    o = _flash_or_ref(cfg, q, k, v, scale, rules)
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    if cache is not None:
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], kr.astype(cache["krope"].dtype), 0, axis=1)
+        cache = dict(cache, ckv=ckv_c, krope=kr_c, pos=jnp.int32(S))
+    return out, cache
+
+
+def mla_decode(cfg: ModelConfig, p, x, cache, rules):
+    """Absorbed MLA decode: attention in latent space, O(kv_lora) cache."""
+    B = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    qn, qr = _mla_q(cfg, p, x, positions, rules)           # (B,1,H,*)
+    ckv_t, kr_t = _mla_kv_latent(cfg, p, x, positions)     # (B,1,kl),(B,1,dr)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_t.astype(cache["ckv"].dtype), pos, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], kr_t.astype(cache["krope"].dtype), pos, axis=1)
+    ckv = constrain(ckv, rules, "act_batch", "act_kv_seq", None)
+    krope = constrain(krope, rules, "act_batch", "act_kv_seq", None)
+    # absorb W_uk into q:  (B,H,kl)
+    q_abs = jnp.einsum("bhn,lhn->bhl", qn[:, 0], p["wuk"])
+    s = jnp.einsum("bhl,bsl->bhs", q_abs, ckv.astype(q_abs.dtype),
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhr,bsr->bhs", qr[:, 0].astype(jnp.float32),
+                       krope.astype(jnp.float32))
+    s = s * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    k_pos = jnp.arange(ckv.shape[1])
+    s = jnp.where((k_pos <= pos)[None, None, :], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", a.astype(ckv.dtype), ckv)
+    o = jnp.einsum("bhl,lhv->bhv", o_lat, p["wuv"])
+    out = jnp.einsum("bhv,hvd->bd", o, p["wo"])[:, None, :]
+    return out, dict(cache, ckv=ckv, krope=krope, pos=pos + 1)
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, seq: int):
+    dt = jnp.dtype(cfg.dtype)
+    val = {
+        "ckv": jax.ShapeDtypeStruct((batch, seq, cfg.kv_lora_rank), dt),
+        "krope": jax.ShapeDtypeStruct((batch, seq, cfg.qk_rope_head_dim), dt),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    axes = {
+        "ckv": ("act_batch", "act_kv_seq", None),
+        "krope": ("act_batch", "act_kv_seq", None),
+        "pos": (),
+    }
+    return val, axes
+
+
+# ---------------------------------------------------------------------------
+# Dispatch helpers used by the block assembler.
+# ---------------------------------------------------------------------------
+
+def attn_template(cfg: ModelConfig) -> dict:
+    return mla_template(cfg) if cfg.attn_type == "mla" else gqa_template(cfg)
+
+
+def attn_full(cfg, p, x, rules, cache=None, causal=True):
+    if cfg.attn_type == "mla":
+        assert causal, "MLA archs are decoder-only here"
+        return mla_full(cfg, p, x, rules, cache=cache)
+    return gqa_full(cfg, p, x, rules, cache=cache, causal=causal)
+
+
+def attn_decode(cfg, p, x, cache, rules):
+    if cfg.attn_type == "mla":
+        return mla_decode(cfg, p, x, cache, rules)
+    return gqa_decode(cfg, p, x, cache, rules)
+
+
+def attn_cache_spec(cfg, batch, seq):
+    if cfg.attn_type == "mla":
+        return mla_cache_spec(cfg, batch, seq)
+    return gqa_cache_spec(cfg, batch, seq)

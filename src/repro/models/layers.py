@@ -1,0 +1,112 @@
+"""Common layers: norms, RoPE, SwiGLU MLP, embeddings, loss.
+
+All layer functions are pure: ``f(cfg, params, x, *, rules) -> y``.
+Params come from templates in the sibling ``*_template`` functions so that
+shapes / logical axes / init live in exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+
+def adt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_template(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(cfg: ModelConfig, p, x):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, dim: int, positions):
+    """positions: (...,) int32 -> cos,sin of shape (..., dim//2), f32."""
+    half = dim // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., dim); cos/sin broadcastable to (..., dim//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_template(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "wi_gate": ParamSpec((d, f), ("embed", "ff"), fan_in_axis=0),
+        "wi_up": ParamSpec((d, f), ("embed", "ff"), fan_in_axis=0),
+        "wo": ParamSpec((f, d), ("ff", "embed"), fan_in_axis=0),
+    }
+
+
+def mlp(cfg: ModelConfig, p, x, rules):
+    h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    h = constrain(h, rules, "act_batch", None, "act_ff")
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head + loss (vocab padded; padded logits masked to -inf)
+# ---------------------------------------------------------------------------
+
+def embed_template(cfg: ModelConfig) -> dict:
+    t = {"embedding": ParamSpec((cfg.vocab_padded, cfg.d_model),
+                                ("vocab", "embed"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_padded),
+                                 ("embed", "vocab"), fan_in_axis=0)
+    return t
+
+
+def embed(cfg: ModelConfig, p, tokens, rules):
+    x = jnp.take(p["embedding"], tokens, axis=0).astype(adt(cfg))
+    return constrain(x, rules, "act_batch", None, None)
+
+
+def lm_logits(cfg: ModelConfig, p, x, rules):
+    w = p["embedding"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = (x @ w).astype(jnp.float32)
+    return constrain(logits, rules, "act_batch", None, "act_vocab")
+
+
+def xent_loss(cfg: ModelConfig, logits, labels, mask=None):
+    """Cross-entropy with padded-vocab masking; logits f32 (..., vocab_padded)."""
+    vp, v = cfg.vocab_padded, cfg.vocab_size
+    if vp != v:
+        neg = jnp.full((vp - v,), -1e30, logits.dtype)
+        logits = logits.at[..., v:].set(neg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(nll.dtype)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,114 @@
+"""Mamba-1 mixer block (falcon-mamba, jamba mamba layers).
+
+Full-sequence path uses the chunked selective scan from
+``repro.kernels.mamba_scan`` (Pallas on TPU, associative-scan ref on CPU).
+Decode keeps O(1) state: SSM state (B, d_inner, N) + conv window (B, k-1, d_inner).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.mamba_scan import ops as scan_ops
+from repro.models.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+
+def mamba_template(cfg: ModelConfig) -> dict:
+    d, di, n, r, k = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.dt_rank_, cfg.ssm_conv)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ssm_inner"), fan_in_axis=0),
+        "conv_w": ParamSpec((k, di), ("conv_k", "ssm_inner"), scale=0.5,
+                            fan_in_axis=0),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), init="zeros"),
+        "x_proj": ParamSpec((di, r + 2 * n), ("ssm_inner", None), fan_in_axis=0),
+        "dt_proj": ParamSpec((r, di), ("dt_rank", "ssm_inner"), fan_in_axis=0),
+        "dt_bias": ParamSpec((di,), ("ssm_inner",), init="ssm_dt",
+                             dtype="float32"),
+        "A_log": ParamSpec((di, n), ("ssm_inner", "ssm_state"), init="ssm_a",
+                           dtype="float32"),
+        "D": ParamSpec((di,), ("ssm_inner",), init="ones", dtype="float32"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"), fan_in_axis=0),
+    }
+
+
+def _dt_bc(cfg: ModelConfig, p, x):
+    """x: (...,di) -> dt(...,di) f32, B(...,N), C(...,N)."""
+    r, n = cfg.dt_rank_, cfg.ssm_state
+    proj = x @ p["x_proj"]
+    dt_r, Bm, Cm = proj[..., :r], proj[..., r : r + n], proj[..., r + n :]
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])
+    return dt, Bm, Cm
+
+
+def _causal_conv(cfg: ModelConfig, p, x):
+    """Depthwise causal conv over seq. x: (B,S,di)."""
+    k = cfg.ssm_conv
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * p["conv_w"][i] for i in range(k))
+    return out + p["conv_b"]
+
+
+def mamba_full(cfg: ModelConfig, p, x, rules, *, cache: Optional[dict] = None,
+               chunk: int = 512, scan_dtype: str = "float32"):
+    B, S, _ = x.shape
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xz = constrain(xz, rules, "act_batch", None, "act_ssm_inner")
+    xs, z = xz[..., :di], xz[..., di:]
+    xc = jax.nn.silu(_causal_conv(cfg, p, xs))
+    dt, Bm, Cm = _dt_bc(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])
+    h0 = jnp.zeros((B, di, cfg.ssm_state), jnp.float32) if cache is None \
+        else cache["h"]
+    y, h_last = scan_ops.selective_scan(xc, dt, A, Bm, Cm, p["D"], h0,
+                                        chunk=min(chunk, S),
+                                        scan_dtype=scan_dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if cache is not None:
+        k = cfg.ssm_conv
+        conv_tail = jax.lax.dynamic_slice_in_dim(
+            jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0))), S, k - 1, axis=1)
+        cache = dict(cache, h=h_last, conv=conv_tail.astype(cache["conv"].dtype),
+                     pos=jnp.int32(S))
+    return out, cache
+
+
+def mamba_decode(cfg: ModelConfig, p, x, cache, rules):
+    """x: (B,1,D); cache: {h:(B,di,N) f32, conv:(B,k-1,di), pos}."""
+    B = x.shape[0]
+    di, k = cfg.d_inner, cfg.ssm_conv
+    xz = x[:, 0] @ p["in_proj"]
+    xs, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([cache["conv"].astype(xs.dtype), xs[:, None]], 1)
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _dt_bc(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])
+    y, h = scan_ops.selective_step(xc, dt, A, Bm, Cm, p["D"], cache["h"])
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    cache = dict(cache, h=h, conv=window[:, 1:].astype(cache["conv"].dtype),
+                 pos=cache["pos"] + 1)
+    return out, cache
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int, seq: int):
+    di, n, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    val = {
+        "h": jax.ShapeDtypeStruct((batch, di, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, k - 1, di), jnp.dtype(cfg.dtype)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    axes = {
+        "h": ("act_batch", "act_ssm_inner", None),
+        "conv": ("act_batch", None, "act_ssm_inner"),
+        "pos": (),
+    }
+    return val, axes

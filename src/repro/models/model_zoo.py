@@ -1,0 +1,214 @@
+"""Model API hub: config -> templates, shardings, jit-able step functions.
+
+Everything the launcher / dry-run / trainer / server needs:
+
+    model = Model(run_config)
+    model.abstract_params()                  # ShapeDtypeStruct tree
+    model.init_params(key)                   # real arrays
+    model.param_shardings(mesh)              # NamedSharding tree
+    model.train_step                         # (params, opt, batch) -> ...
+    model.prefill / model.decode_step        # serving
+    model.dryrun_case(kind, mesh)            # (fn, args, in/out shardings)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeProfile
+from repro.data.pipeline import batch_logical_axes, make_batch_specs
+from repro.models import transformer as tfm
+from repro.models.params import (abstract_params, init_params, logical_axes)
+from repro.optim.optimizers import (clip_by_global_norm, make_optimizer,
+                                    opt_state_axes)
+from repro.optim.schedules import cosine_schedule
+from repro.parallel.sharding import get_rules, tree_pspecs, tree_shardings
+
+
+def _axes_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+@dataclass
+class Model:
+    run: RunConfig
+
+    def __post_init__(self):
+        self.cfg = self.run.model
+        self.rules = get_rules(self.run.sharding_preset, self.run.rule_overrides)
+        self.template = tfm.model_template(self.cfg)
+        self.param_axes = logical_axes(self.template)
+        self.opt_init, self.opt_update = make_optimizer(
+            self.run.optimizer, state_dtype=self.run.opt_state_dtype,
+            weight_decay=self.run.weight_decay)
+        self.schedule = cosine_schedule(self.run.learning_rate)
+
+    # ------------------------------------------------------------ parameters
+    def abstract_params(self):
+        return abstract_params(self.template, self.cfg.param_dtype)
+
+    def init_params(self, key):
+        return init_params(self.template, key, self.cfg.param_dtype)
+
+    def abstract_opt_state(self):
+        return jax.eval_shape(self.opt_init, self.abstract_params())
+
+    def param_pspecs(self, mesh: Mesh):
+        return tree_pspecs(self.rules, self.param_axes, self.abstract_params(), mesh)
+
+    def param_shardings(self, mesh: Mesh):
+        return tree_shardings(self.rules, self.param_axes, self.abstract_params(), mesh)
+
+    def opt_axes(self):
+        return opt_state_axes(self.run.optimizer, self.param_axes)
+
+    def opt_shardings(self, mesh: Mesh):
+        return tree_shardings(self.rules, self.opt_axes(),
+                              self.abstract_opt_state(), mesh)
+
+    # ----------------------------------------------------------------- batch
+    def abstract_batch(self):
+        return make_batch_specs(self.cfg, self.run.shape)
+
+    def batch_shardings(self, mesh: Mesh):
+        return tree_shardings(self.rules, batch_logical_axes(self.cfg, self.run.shape),
+                              self.abstract_batch(), mesh)
+
+    # ----------------------------------------------------------------- cache
+    def cache_spec(self):
+        sp = self.run.shape
+        enc_len = sp.seq_len if self.cfg.is_encoder_decoder else 0
+        return tfm.cache_spec(self.cfg, sp.global_batch, sp.seq_len, enc_len)
+
+    def abstract_cache(self):
+        return self.cache_spec()[0]
+
+    def init_cache(self):
+        sp = self.run.shape
+        enc_len = sp.seq_len if self.cfg.is_encoder_decoder else 0
+        return tfm.init_cache(self.cfg, sp.global_batch, sp.seq_len, enc_len)
+
+    def cache_shardings(self, mesh: Mesh):
+        val, axes = self.cache_spec()
+        return tree_shardings(self.rules, axes, val, mesh)
+
+    # ------------------------------------------------------------ step fns
+    @property
+    def train_step(self) -> Callable:
+        cfg, run, rules = self.cfg, self.run, self.rules
+        opt_update, schedule = self.opt_update, self.schedule
+
+        def grads_of(params, batch):
+            def loss_fn(p):
+                return tfm.forward_train(cfg, run, p, batch, rules)
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            return grads, metrics
+
+        def step(params, opt_state, batch):
+            if run.grad_accum > 1:
+                # microbatch accumulation: split the global batch's leading
+                # dim; equal-size means average exactly to the full-batch
+                # gradient. Peak activation memory drops ~grad_accum x.
+                n = run.grad_accum
+                micro = jax.tree.map(
+                    lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                    batch)
+
+                def acc(carry, mb):
+                    g, m = grads_of(params, mb)
+                    return (jax.tree.map(jnp.add, carry[0], g),
+                            jax.tree.map(jnp.add, carry[1], m)), None
+
+                zero_g = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                g0, m0 = grads_of(params, jax.tree.map(lambda x: x[0], micro))
+                (gsum, msum), _ = jax.lax.scan(
+                    acc, (jax.tree.map(lambda a, b: a.astype(jnp.float32) + b,
+                                       g0, zero_g), m0),
+                    jax.tree.map(lambda x: x[1:], micro))
+                grads = jax.tree.map(lambda g, p: (g / n).astype(p.dtype),
+                                     gsum, params)
+                metrics = jax.tree.map(lambda m: m / n, msum)
+            else:
+                grads, metrics = grads_of(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+            lr = schedule(opt_state["step"] + 1)   # step counter is 0-based
+            params, opt_state = opt_update(params, grads, opt_state, lr=lr)
+            metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+            return params, opt_state, metrics
+
+        return step
+
+    @property
+    def eval_loss(self) -> Callable:
+        cfg, run, rules = self.cfg, self.run, self.rules
+
+        def fn(params, batch):
+            loss, metrics = tfm.forward_train(cfg, run, params, batch, rules)
+            return metrics
+
+        return fn
+
+    @property
+    def prefill(self) -> Callable:
+        cfg, run, rules = self.cfg, self.run, self.rules
+
+        def fn(params, batch, cache):
+            return tfm.forward_prefill(cfg, run, params, batch, cache, rules)
+
+        return fn
+
+    @property
+    def decode_step(self) -> Callable:
+        cfg, run, rules = self.cfg, self.run, self.rules
+
+        def fn(params, tokens, cache):
+            return tfm.forward_decode(cfg, run, params, tokens, cache, rules)
+
+        return fn
+
+    # ------------------------------------------------------------- dry-run
+    def dryrun_case(self, mesh: Mesh):
+        """(fn, abstract args, in_shardings, out_shardings) for this cell."""
+        kind = self.run.shape.kind
+        ps = self.param_shardings(mesh)
+        repl = NamedSharding(mesh, P())
+        metrics_sh = repl  # scalars
+        if kind == "train":
+            os_ = self.opt_shardings(mesh)
+            bs = self.batch_shardings(mesh)
+            args = (self.abstract_params(), self.abstract_opt_state(),
+                    self.abstract_batch())
+            in_sh = (ps, os_, bs)
+            out_sh = (ps, os_, None)
+            return self.train_step, args, in_sh, out_sh
+        if kind == "prefill":
+            cs = self.cache_shardings(mesh)
+            bs = self.batch_shardings(mesh)
+            abatch = self.abstract_batch()
+            abatch.pop("labels", None)
+            bs = {k: v for k, v in bs.items() if k in abatch}
+            args = (self.abstract_params(), abatch, self.abstract_cache())
+            return self.prefill, args, (ps, bs, cs), (None, cs)
+        # decode
+        B = self.run.shape.global_batch
+        cs = self.cache_shardings(mesh)
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+        daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        tok_sh = NamedSharding(
+            mesh, P(daxes) if daxes and B % _databatch(mesh) == 0 else P())
+        args = (self.abstract_params(), tok, self.abstract_cache())
+        return self.decode_step, args, (ps, tok_sh, cs), (None, cs)
+
+
+def _databatch(mesh: Mesh) -> int:
+    n = 1
+    for ax in ("pod", "data"):
+        n *= mesh.shape.get(ax, 1)
+    return n

@@ -1,0 +1,267 @@
+"""Mixture-of-Experts with two dispatch implementations.
+
+``moe`` (default) — **grouped sort-based dispatch**: tokens are reshaped
+into shardable groups (G over the data axis); within each group the top-k
+assignments are sorted by expert, capacity-bounded positions come from a
+running count, and expert input buffers (G, E, C, D) are built by *gather*
+— zero dispatch FLOPs. With the expert dim sharded (EP) the gathers/
+scatters become the expert all-to-all under SPMD. This matters at
+deepseek scale: the classic one-hot dispatch einsum costs T*E*C*D FLOPs
+(~100x the expert matmuls at E=256); gather dispatch removes it.
+
+``moe_gshard`` — the classic GShard/Switch dense one-hot einsum dispatch,
+kept as the reference implementation (tests assert both produce identical
+outputs when capacity is not binding).
+
+When ``n_experts`` does not divide the model axis (qwen2-moe: 60), the rule
+system replicates the expert dim and shards ``moe_ff`` instead (TP inside
+experts) — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import mlp, mlp_template
+from repro.models.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+CAPACITY_FACTOR = 1.25
+GROUP_SIZE = 2048
+
+
+def moe_template(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    t = {
+        "router": ParamSpec((d, e), ("embed", None), fan_in_axis=0,
+                            dtype="float32"),
+        "wi_gate": ParamSpec((e, d, f), ("experts", "embed", "moe_ff"), fan_in_axis=1),
+        "wi_up": ParamSpec((e, d, f), ("experts", "embed", "moe_ff"), fan_in_axis=1),
+        "wo": ParamSpec((e, f, d), ("experts", "moe_ff", "embed"), fan_in_axis=1),
+    }
+    if cfg.n_shared_experts:
+        t["shared"] = mlp_template(cfg, cfg.n_shared_experts * cfg.moe_d_ff)
+    return t
+
+
+def _grouping(total_tokens: int) -> Tuple[int, int]:
+    g = math.gcd(total_tokens, 32)
+    while total_tokens // g > GROUP_SIZE and total_tokens % (g * 2) == 0:
+        g *= 2
+    return g, total_tokens // g
+
+
+def _route(cfg: ModelConfig, p, xt):
+    """xt: (G,Tg,D) -> (probs, gate_vals, idx) with top-k renormalized."""
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    return probs, gate_vals, idx
+
+
+def _aux_loss(cfg: ModelConfig, probs, idx):
+    onehot = jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32)
+    f_e = jnp.mean(onehot.sum(-2), axis=tuple(range(onehot.ndim - 2)))
+    p_e = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return cfg.router_aux_weight * cfg.n_experts * jnp.sum(f_e * p_e)
+
+
+def _capacity(cfg: ModelConfig, Tg: int) -> int:
+    K, E = cfg.experts_per_token, cfg.n_experts
+    return max(int(math.ceil(Tg * K / E * CAPACITY_FACTOR)), min(Tg, 4))
+
+
+# ---------------------------------------------------------------------------
+# Sort-based dispatch (default)
+# ---------------------------------------------------------------------------
+
+def moe(cfg: ModelConfig, p, x, rules):
+    """x: (B,S,D) -> (y, aux_loss). Grouped sort-based dispatch."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.experts_per_token
+    G, Tg = _grouping(T)
+    C = _capacity(cfg, Tg)
+
+    xt = x.reshape(G, Tg, D)
+    xt = constrain(xt, rules, "act_batch", None, None)
+    probs, gate_vals, idx = _route(cfg, p, xt)        # (G,Tg,K)
+
+    def dispatch_one(xg, idxg):
+        """xg: (Tg,D); idxg: (Tg,K) -> (xin (E,C,D), slot (Tg,K), keep)."""
+        flat_e = idxg.reshape(-1)                      # (Tg*K,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  jnp.cumsum(counts)[:-1]])
+        pos_sorted = jnp.arange(Tg * K, dtype=jnp.int32) - starts[sorted_e]
+        keep_sorted = pos_sorted < C
+        slot_sorted = jnp.where(keep_sorted, sorted_e * C + pos_sorted, E * C)
+        # unsort the slot assignment back to (Tg,K)
+        slot = jnp.zeros((Tg * K,), jnp.int32).at[order].set(slot_sorted)
+        keep = jnp.zeros((Tg * K,), bool).at[order].set(keep_sorted)
+        tok_sorted = order // K
+        token_for_slot = jnp.full((E * C + 1,), 0, jnp.int32).at[
+            slot_sorted].set(jnp.where(keep_sorted, tok_sorted, 0))
+        valid = jnp.zeros((E * C + 1,), bool).at[slot_sorted].set(keep_sorted)
+        xin = xg[token_for_slot[:-1]] * valid[:-1, None].astype(xg.dtype)
+        return xin.reshape(E, C, D), slot.reshape(Tg, K), keep.reshape(Tg, K)
+
+    xin, slot, keep = jax.vmap(dispatch_one)(xt, idx)  # (G,E,C,D)
+    xin = constrain(xin, rules, "act_moe_group", "act_experts", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["wi_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xin, p["wi_up"])
+    h = constrain(h, rules, "act_moe_group", "act_experts", None, "act_moe_ff")
+    yexp = jnp.einsum("gecf,efd->gecd", h, p["wo"])    # (G,E,C,D)
+    yexp = constrain(yexp, rules, "act_moe_group", "act_experts", None, None)
+
+    def combine_one(yg, slotg, keepg, gateg):
+        yflat = yg.reshape(E * C, D)
+        rows = yflat[jnp.minimum(slotg.reshape(-1), E * C - 1)]
+        rows = rows * keepg.reshape(-1, 1).astype(yg.dtype)
+        rows = rows.reshape(Tg, K, D)
+        return jnp.sum(rows * gateg[..., None].astype(yg.dtype), axis=1)
+
+    y = jax.vmap(combine_one)(yexp, slot, keep, gate_vals)  # (G,Tg,D)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(cfg, p["shared"], xt, rules)
+    return y.reshape(B, S, D), _aux_loss(cfg, probs, idx)
+
+
+# ---------------------------------------------------------------------------
+# Manual expert parallelism: explicit all-to-all (the deepseek-scale path)
+# ---------------------------------------------------------------------------
+
+def moe_manual_ep(cfg: ModelConfig, p, x, rules):
+    """Sort dispatch + *explicit* expert all-to-all via shard_map.
+
+    Under auto-SPMD, gathers into an expert-sharded capacity buffer become
+    full all-gathers (measured: 10x worse than baseline on deepseek-v3 —
+    EXPERIMENTS.md §Perf). Wrapping just the expert computation in a
+    partial-manual shard_map over (data, model) forces the real all-to-all:
+    each device sends its groups' per-expert slices, computes its resident
+    experts (E/256 each), and sends results back. Token routing, capacity
+    assignment and combine stay in the auto region unchanged.
+
+    Falls back to :func:`moe` when the mesh/expert counts don't divide.
+    """
+    from repro.parallel.sharding import get_abstract_mesh
+    from jax.sharding import PartitionSpec as P
+
+    mesh = get_abstract_mesh()
+    E, K = cfg.n_experts, cfg.experts_per_token
+    ep_axes = tuple(ax for ax in ("data", "model")
+                    if mesh is not None and ax in mesh.shape)
+    n_ep = 1
+    for ax in ep_axes:
+        n_ep *= mesh.shape[ax]
+    B, S, D = x.shape
+    G, Tg = _grouping(B * S)
+    if mesh is None or n_ep == 1 or E % n_ep or G % n_ep:
+        return moe(cfg, p, x, rules)
+    E_loc, G_loc = E // n_ep, G // n_ep
+    C = _capacity(cfg, Tg)
+
+    xt = x.reshape(G, Tg, D)
+    xt = constrain(xt, rules, "act_moe_group", None, None)
+    probs, gate_vals, idx = _route(cfg, p, xt)
+
+    def dispatch_one(xg, idxg):
+        flat_e = idxg.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  jnp.cumsum(counts)[:-1]])
+        pos_sorted = jnp.arange(Tg * K, dtype=jnp.int32) - starts[sorted_e]
+        keep_sorted = pos_sorted < C
+        slot_sorted = jnp.where(keep_sorted, sorted_e * C + pos_sorted, E * C)
+        slot = jnp.zeros((Tg * K,), jnp.int32).at[order].set(slot_sorted)
+        keep = jnp.zeros((Tg * K,), bool).at[order].set(keep_sorted)
+        tok_sorted = order // K
+        token_for_slot = jnp.full((E * C + 1,), 0, jnp.int32).at[
+            slot_sorted].set(jnp.where(keep_sorted, tok_sorted, 0))
+        valid = jnp.zeros((E * C + 1,), bool).at[slot_sorted].set(keep_sorted)
+        xin = xg[token_for_slot[:-1]] * valid[:-1, None].astype(xg.dtype)
+        return xin.reshape(E, C, D), slot.reshape(Tg, K), keep.reshape(Tg, K)
+
+    xin, slot, keep = jax.vmap(dispatch_one)(xt, idx)      # (G,E,C,D)
+
+    def expert_compute(xin_loc, wg, wu, wo):
+        """Manual region. xin_loc: (G_loc,E,C,D); w*: (E_loc,...)."""
+        z = xin_loc.reshape(G_loc, n_ep, E_loc, C, D)
+        z = jnp.moveaxis(z, 1, 0)                          # (n_ep,G_loc,...)
+        z = jax.lax.all_to_all(z, ep_axes, split_axis=0, concat_axis=0,
+                               tiled=True)                 # src-major
+        z = z.reshape(n_ep * G_loc, E_loc, C, D)
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", z, wg))
+        h = h * jnp.einsum("gecd,edf->gecf", z, wu)
+        yz = jnp.einsum("gecf,efd->gecd", h, wo)
+        yz = yz.reshape(n_ep, G_loc, E_loc, C, D)
+        yz = jax.lax.all_to_all(yz, ep_axes, split_axis=0, concat_axis=0,
+                                tiled=True)
+        yz = jnp.moveaxis(yz, 0, 1)                        # (G_loc,n_ep,...)
+        return yz.reshape(G_loc, E, C, D)
+
+    w_spec = P(ep_axes)
+    yexp = jax.shard_map(
+        expert_compute, mesh=mesh,
+        in_specs=(P(ep_axes), w_spec, w_spec, w_spec),
+        out_specs=P(ep_axes),
+        axis_names=set(ep_axes), check_vma=False)(
+            xin, p["wi_gate"], p["wi_up"], p["wo"])        # (G,E,C,D)
+
+    def combine_one(yg, slotg, keepg, gateg):
+        yflat = yg.reshape(E * C, D)
+        rows = yflat[jnp.minimum(slotg.reshape(-1), E * C - 1)]
+        rows = rows * keepg.reshape(-1, 1).astype(yg.dtype)
+        rows = rows.reshape(Tg, K, D)
+        return jnp.sum(rows * gateg[..., None].astype(yg.dtype), axis=1)
+
+    y = jax.vmap(combine_one)(yexp, slot, keep, gate_vals)
+    if cfg.n_shared_experts:
+        y = y + mlp(cfg, p["shared"], xt, rules)
+    return y.reshape(B, S, D), _aux_loss(cfg, probs, idx)
+
+
+# ---------------------------------------------------------------------------
+# GShard one-hot einsum dispatch (reference)
+# ---------------------------------------------------------------------------
+
+def moe_gshard(cfg: ModelConfig, p, x, rules):
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.experts_per_token
+    G, Tg = _grouping(T)
+    C = _capacity(cfg, Tg)
+
+    xt = x.reshape(G, Tg, D)
+    probs, gate_vals, idx = _route(cfg, p, xt)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)          # (G,Tg,K,E)
+    flat = onehot.reshape(G, Tg * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos = jnp.einsum("gne,gne->gn", pos, flat).reshape(G, Tg, K)
+    keep = (pos < C).astype(jnp.float32)
+    gate_kept = gate_vals * keep
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot, pos_oh)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, pos_oh, gate_kept)
+
+    xin = jnp.einsum("gtec,gtd->gecd", disp.astype(x.dtype), xt)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["wi_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xin, p["wi_up"])
+    yexp = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    y = jnp.einsum("gtec,gecd->gtd", comb.astype(x.dtype), yexp)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(cfg, p["shared"], xt, rules)
+    return y.reshape(B, S, D), _aux_loss(cfg, probs, idx)

@@ -1,0 +1,93 @@
+"""Parameter templates: single source of truth for shapes, init and sharding.
+
+A model declares its parameters once as a pytree of :class:`ParamSpec`.
+From the template we derive:
+  * ``init_params``      — real arrays (smoke tests, examples, training)
+  * ``abstract_params``  — ``ShapeDtypeStruct`` stand-ins (dry-run lowering)
+  * ``logical_axes``     — pytree of logical-dim-name tuples consumed by
+    ``parallel.sharding`` to produce ``PartitionSpec`` trees.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]     # logical dim names, len == ndim
+    init: str = "normal"                # normal | zeros | ones | ssm_a | ssm_dt
+    scale: float = 1.0                  # stddev multiplier for "normal"
+    fan_in_axis: Optional[int] = None   # axis whose size sets 1/sqrt(fan_in)
+    dtype: Optional[str] = None         # override param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(f, template):
+    return jax.tree.map(f, template, is_leaf=_is_spec)
+
+
+def abstract_params(template, param_dtype: str):
+    def mk(s: ParamSpec):
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or param_dtype))
+    return tree_map_specs(mk, template)
+
+
+def logical_axes(template):
+    return tree_map_specs(lambda s: s.axes, template)
+
+
+def init_params(template, key, param_dtype: str):
+    leaves, treedef = jax.tree.flatten(template, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for s, k in zip(leaves, keys):
+        dt = jnp.dtype(s.dtype or param_dtype)
+        if s.init == "zeros":
+            v = jnp.zeros(s.shape, dt)
+        elif s.init == "ones":
+            v = jnp.ones(s.shape, dt)
+        elif s.init == "ssm_a":
+            # mamba1 A_log init: log(1..N) broadcast over channels
+            n = s.shape[-1]
+            v = jnp.broadcast_to(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), s.shape).astype(dt)
+        elif s.init == "ssm_dt":
+            # dt bias ~ softplus^-1(uniform(1e-3, 1e-1))
+            u = jax.random.uniform(k, s.shape, jnp.float32,
+                                   math.log(1e-3), math.log(1e-1))
+            dtv = jnp.exp(u)
+            v = (dtv + jnp.log(-jnp.expm1(-dtv))).astype(dt)
+        elif s.init == "normal":
+            fan_in = s.shape[s.fan_in_axis] if s.fan_in_axis is not None else None
+            std = s.scale * (1.0 / math.sqrt(fan_in) if fan_in else 0.02)
+            v = (jax.random.normal(k, s.shape, jnp.float32) * std).astype(dt)
+        else:
+            raise ValueError(f"unknown init {s.init}")
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(template) -> int:
+    leaves = jax.tree.leaves(template, is_leaf=_is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacked (scanned) leading dim to every spec in a tree."""
+    def st(s: ParamSpec):
+        fan = None if s.fan_in_axis is None else s.fan_in_axis + 1
+        return ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale,
+                         fan, s.dtype)
+    return tree_map_specs(st, spec_tree)

@@ -1,0 +1,345 @@
+"""Unified LM assembler for every assigned architecture family.
+
+The per-layer block types produced by ``ModelConfig.block_type`` are
+compressed into *stages* ``(pattern, repeats)``; parameters of a stage are
+stacked along a leading ``repeats`` axis and the stage runs under
+``jax.lax.scan`` (compact HLO — a hard requirement for compiling full-size
+configs against 512 fake devices on this container; see DESIGN.md).
+
+Modes:
+  * ``full``    — train forward over a whole sequence (no cache),
+  * ``prefill`` — full forward that also fills decode caches,
+  * ``decode``  — one token against caches.
+
+Encoder-decoder (seamless) adds an encoder stack + cross-attention; VLM /
+audio frontends are embedding stubs per the assignment spec.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN_DENSE, ATTN_MOE, MAMBA_DENSE, MAMBA_MOE,
+                                MAMBA_ONLY, ModelConfig, RunConfig)
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import moe as moe_mod
+from repro.models.layers import (adt, embed, embed_template, lm_logits, mlp,
+                                 mlp_template, rmsnorm, rmsnorm_template,
+                                 xent_loss)
+from repro.models.params import ParamSpec, abstract_params, init_params, logical_axes
+from repro.models.params import stack_specs
+from repro.parallel.sharding import constrain
+
+
+def _has_attn(bt: str) -> bool:
+    return bt in (ATTN_DENSE, ATTN_MOE)
+
+
+def _has_moe(bt: str) -> bool:
+    return bt in (ATTN_MOE, MAMBA_MOE)
+
+
+def _has_mlp(bt: str) -> bool:
+    return bt != MAMBA_ONLY
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder only): GQA projections, no RoPE.
+# ---------------------------------------------------------------------------
+
+def xattn_template(cfg: ModelConfig) -> dict:
+    return attn.gqa_template(cfg)
+
+
+def xattn_full(cfg, p, x, enc_out, rules, cache=None):
+    from repro.kernels.flash_attention import ops as fops
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    o = fops.flash_attention(q, k, v, scale=cfg.hdim ** -0.5, causal=False)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if cache is not None:
+        cache = dict(cache, xk=k.astype(cache["xk"].dtype),
+                     xv=v.astype(cache["xv"].dtype))
+    return out, cache
+
+
+def xattn_decode(cfg, p, x, cache, rules):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k, v = cache["xk"].astype(q.dtype), cache["xv"].astype(q.dtype)
+    o = attn.attend(q, k, v, q_pos=jnp.zeros((1,), jnp.int32),
+                    kv_len=k.shape[1], scale=cfg.hdim ** -0.5,
+                    rules=rules, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
+# Block template / apply
+# ---------------------------------------------------------------------------
+
+def block_template(cfg: ModelConfig, bt: str, *, cross: bool = False) -> dict:
+    d = cfg.d_model
+    t: Dict[str, Any] = {"ln1": rmsnorm_template(d)}
+    if _has_attn(bt):
+        t["attn"] = attn.attn_template(cfg)
+    else:
+        t["mixer"] = mam.mamba_template(cfg)
+    if cross:
+        t["ln_x"] = rmsnorm_template(d)
+        t["xattn"] = xattn_template(cfg)
+    if _has_mlp(bt):
+        t["ln2"] = rmsnorm_template(d)
+        t["moe" if _has_moe(bt) else "mlp"] = (
+            moe_mod.moe_template(cfg) if _has_moe(bt) else mlp_template(cfg))
+    return t
+
+
+def block_cache_spec(cfg: ModelConfig, bt: str, batch: int, seq: int,
+                     *, cross: bool = False, enc_len: int = 0):
+    val: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    if _has_attn(bt):
+        v, a = attn.attn_cache_spec(cfg, batch, seq)
+        val.update(v), axes.update(a)
+    else:
+        v, a = mam.mamba_cache_spec(cfg, batch, seq)
+        val.update(v), axes.update(a)
+    if cross:
+        kvp, hd = cfg.kv_heads_padded, cfg.hdim
+        dt = jnp.dtype(cfg.dtype)
+        val["xk"] = jax.ShapeDtypeStruct((batch, enc_len, kvp, hd), dt)
+        val["xv"] = jax.ShapeDtypeStruct((batch, enc_len, kvp, hd), dt)
+        axes["xk"] = ("act_batch", None, "act_kv_heads", None)
+        axes["xv"] = ("act_batch", None, "act_kv_heads", None)
+    return val, axes
+
+
+def block_apply(cfg: ModelConfig, run: RunConfig, bt: str, p, x, rules, *,
+                mode: str, cache=None, enc_out=None, causal: bool = True):
+    """Returns (x, cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(cfg, p["ln1"], x)
+    if _has_attn(bt):
+        if mode == "decode":
+            a, cache = attn.attn_decode(cfg, p["attn"], h, cache, rules)
+        else:
+            a, cache = attn.attn_full(cfg, p["attn"], h, rules,
+                                      cache=cache if mode == "prefill" else None,
+                                      causal=causal)
+    else:
+        if mode == "decode":
+            a, cache = mam.mamba_decode(cfg, p["mixer"], h, cache, rules)
+        else:
+            a, cache = mam.mamba_full(cfg, p["mixer"], h, rules,
+                                      cache=cache if mode == "prefill" else None,
+                                      chunk=run.ssm_chunk,
+                                      scan_dtype=run.ssm_scan_dtype)
+    x = x + a
+    if "xattn" in p:
+        h = rmsnorm(cfg, p["ln_x"], x)
+        if mode == "decode":
+            xa, cache = xattn_decode(cfg, p["xattn"], h, cache, rules)
+        else:
+            xa, cache = xattn_full(cfg, p["xattn"], h, enc_out, rules,
+                                   cache=cache if mode == "prefill" else None)
+        x = x + xa
+    if _has_mlp(bt):
+        h = rmsnorm(cfg, p["ln2"], x)
+        if _has_moe(bt):
+            moe_fn = {"sort": moe_mod.moe, "manual_ep": moe_mod.moe_manual_ep,
+                      "gshard": moe_mod.moe_gshard}[run.moe_impl]
+            m, aux = moe_fn(cfg, p["moe"], h, rules)
+        else:
+            m = mlp(cfg, p["mlp"], h, rules)
+        x = x + m
+    x = constrain(x, rules, "act_batch", None, None)
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model template
+# ---------------------------------------------------------------------------
+
+def model_template(cfg: ModelConfig) -> dict:
+    t: Dict[str, Any] = {"embed": embed_template(cfg)}
+    cross = cfg.is_encoder_decoder
+    for si, (pattern, reps) in enumerate(cfg.stages()):
+        stage = {f"pos_{j}": block_template(cfg, bt, cross=cross)
+                 for j, bt in enumerate(pattern)}
+        t[f"stage_{si}"] = stack_specs(stage, reps)
+    t["final_norm"] = rmsnorm_template(cfg.d_model)
+    if cfg.is_encoder_decoder:
+        enc = {"pos_0": block_template(cfg, ATTN_DENSE)}
+        t["enc_stage"] = stack_specs(enc, cfg.n_encoder_layers)
+        t["enc_norm"] = rmsnorm_template(cfg.d_model)
+    if cfg.mtp:
+        t["mtp_proj"] = ParamSpec((2 * cfg.d_model, cfg.d_model),
+                                  ("embed", "embed"), fan_in_axis=0)
+        t["mtp_block"] = block_template(cfg, ATTN_DENSE)
+        t["mtp_norm"] = rmsnorm_template(cfg.d_model)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Stage runners (scan over stacked repeats)
+# ---------------------------------------------------------------------------
+
+def _remat(run: RunConfig, fn):
+    if run.remat == "none":
+        return fn
+    if run.remat == "dots_saveable":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+def run_stages(cfg, run, params, x, rules, *, mode, caches=None, enc_out=None,
+               causal=True, prefix="stage"):
+    """Scan every stage. Returns (x, new_caches, aux_sum)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {} if caches is not None else None
+    stages = cfg.stages() if prefix == "stage" else ((("enc",), cfg.n_encoder_layers),)
+    for si, (pattern, reps) in enumerate(stages):
+        key = f"{prefix}_{si}" if prefix == "stage" else "enc_stage"
+        sp = params[key]
+        c_in = caches.get(key) if caches is not None else None
+
+        def body(carry, xs, _pattern=pattern):
+            xx = carry
+            lp, lc = xs
+            aux = jnp.zeros((), jnp.float32)
+            c_out = {} if lc is not None else None
+            for j, bt in enumerate(_pattern):
+                bt_eff = ATTN_DENSE if bt == "enc" else bt
+                pj = lp[f"pos_{j}"]
+                cj = lc[f"pos_{j}"] if lc is not None else None
+                xx, cj, a = block_apply(
+                    cfg, run, bt_eff, pj, xx, rules, mode=mode, cache=cj,
+                    enc_out=enc_out, causal=causal)
+                aux = aux + a
+                if c_out is not None:
+                    c_out[f"pos_{j}"] = cj
+            return xx, (aux, c_out)
+
+        body = _remat(run, body)
+        xs = (sp, c_in)
+        unroll = run.unroll_factor if run.unroll_stage == key else run.scan_unroll
+        x, (auxs, c_outs) = jax.lax.scan(body, x, xs, unroll=unroll)
+        aux_total = aux_total + jnp.sum(auxs)
+        if new_caches is not None:
+            new_caches[key] = c_outs
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Input embedding front (tokens + optional frontend stub prefix)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg, params, batch, rules):
+    x = embed(cfg, params["embed"], batch["tokens"], rules)
+    if cfg.frontend and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+def encode(cfg, run, params, batch, rules):
+    """Encoder stack over stub frame embeddings (seamless)."""
+    x = batch["encoder_embeds"].astype(adt(cfg))
+    x, _, _ = run_stages(cfg, run, params, x, rules, mode="full",
+                         causal=False, prefix="enc")
+    return rmsnorm(cfg, params["enc_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def forward_train(cfg: ModelConfig, run: RunConfig, params, batch, rules):
+    """batch: tokens (B,S[-F]), labels (B,S_total-1 aligned), optional stubs.
+
+    Returns (loss, metrics).
+    """
+    enc_out = encode(cfg, run, params, batch, rules) if cfg.is_encoder_decoder else None
+    x = embed_inputs(cfg, params, batch, rules)
+    x, _, aux = run_stages(cfg, run, params, x, rules, mode="full",
+                           enc_out=enc_out)
+    x = rmsnorm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params["embed"], x, rules)
+
+    n_front = batch.get("frontend_embeds").shape[1] if (
+        cfg.frontend and "frontend_embeds" in batch) else 0
+    # next-token loss over token positions (frontend prefix excluded)
+    tok_logits = logits[:, n_front:, :]
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    loss = xent_loss(cfg, tok_logits[:, :-1], labels[:, 1:],
+                     None if mask is None else mask[:, 1:])
+    metrics = {"xent": loss, "aux": aux}
+    if cfg.mtp:
+        emb_next = embed(cfg, params["embed"],
+                         jnp.pad(labels[:, 1:], ((0, 0), (0, 1))), rules)
+        h = jnp.concatenate([rmsnorm(cfg, params["mtp_norm"], x[:, n_front:]),
+                             emb_next], axis=-1) @ params["mtp_proj"]
+        h, _, _ = block_apply(cfg, run, ATTN_DENSE, params["mtp_block"], h,
+                              rules, mode="full")
+        mtp_logits = lm_logits(cfg, params["embed"], h, rules)
+        # predict t+2: logits at t score labels[t+2]
+        mtp_loss = xent_loss(cfg, mtp_logits[:, :-2], labels[:, 2:])
+        metrics["mtp"] = mtp_loss
+        loss = loss + cfg.mtp_loss_weight * mtp_loss
+    loss = loss + aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def forward_prefill(cfg, run, params, batch, cache, rules):
+    """Full forward filling caches; returns (last-position logits, cache)."""
+    enc_out = encode(cfg, run, params, batch, rules) if cfg.is_encoder_decoder else None
+    x = embed_inputs(cfg, params, batch, rules)
+    x, cache, _ = run_stages(cfg, run, params, x, rules, mode="prefill",
+                             caches=cache, enc_out=enc_out)
+    x = rmsnorm(cfg, params["final_norm"], x[:, -1:, :])
+    return lm_logits(cfg, params["embed"], x, rules)[:, 0], cache
+
+
+def forward_decode(cfg, run, params, tokens, cache, rules):
+    """tokens: (B,) int32. Returns (logits (B,V), cache)."""
+    x = embed(cfg, params["embed"], tokens[:, None], rules)
+    x, cache, _ = run_stages(cfg, run, params, x, rules, mode="decode",
+                             caches=cache)
+    x = rmsnorm(cfg, params["final_norm"], x)
+    return lm_logits(cfg, params["embed"], x, rules)[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, seq: int, enc_len: int = 0):
+    """Abstract decode-cache pytree + logical-axes pytree (stacked per stage)."""
+    cross = cfg.is_encoder_decoder
+    val: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    for si, (pattern, reps) in enumerate(cfg.stages()):
+        sv, sa = {}, {}
+        for j, bt in enumerate(pattern):
+            v, a = block_cache_spec(cfg, bt, batch, seq, cross=cross,
+                                    enc_len=enc_len)
+            sv[f"pos_{j}"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((reps,) + s.shape, s.dtype), v)
+            sa[f"pos_{j}"] = jax.tree.map(
+                lambda ax: ("layers",) + ax, a,
+                is_leaf=lambda t: isinstance(t, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in t))
+        val[f"stage_{si}"] = sv
+        axes[f"stage_{si}"] = sa
+    return val, axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, enc_len: int = 0):
+    val, _ = cache_spec(cfg, batch, seq, enc_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), val)

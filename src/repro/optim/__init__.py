@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw_init, adamw_update, adafactor_init,
+                                    adafactor_update, make_optimizer)  # noqa: F401
+from repro.optim.schedules import cosine_schedule  # noqa: F401

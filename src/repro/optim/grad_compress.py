@@ -1,0 +1,95 @@
+"""Cross-pod gradient synchronization with compression (beyond-paper).
+
+Multi-pod data parallelism pays its gradient all-reduce over the slow
+pod-to-pod links (DCI, ~25 GB/s vs 50 GB/s/link ICI in-pod). This module
+makes that reduction explicit — ``jax.shard_map`` manual over the ``pod``
+axis only, auto over (data, model) — so the wire format is controllable:
+
+  * ``none``  — plain psum (bf16 wire at param dtype; the pjit baseline),
+  * ``bf16``  — cast to bf16 before the psum (2x vs fp32 grads),
+  * ``int8``  — per-tensor max-scale int8 quantization; int8 all-gather
+    over the pod axis + local dequant-sum (4x vs fp32, 2x vs bf16 wire),
+    with deterministic rounding so every pod computes identical updates.
+
+The int8 path is exact up to quantization error; EXPERIMENTS.md §Perf
+quantifies both the HLO wire-bytes reduction and the gradient error.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def sync_grads(grads, axis_name: str, method: str = "none"):
+    """Average gradients across ``axis_name`` with the chosen wire format."""
+    n = jax.lax.axis_size(axis_name)
+
+    def none_(g):
+        return jax.lax.psum(g, axis_name) / n
+
+    def bf16_(g):
+        # all-gather keeps bf16 as the wire dtype; direct bf16 psum trips an
+        # XLA:CPU crash ("Invalid binary instruction opcode copy") under
+        # partial-manual shard_map, and ring-AR wire bytes are equivalent.
+        gs = jax.lax.all_gather(g.astype(jnp.bfloat16), axis_name)
+        return (jnp.sum(gs.astype(jnp.float32), axis=0) / n).astype(g.dtype)
+
+    def int8_(g):
+        q, scale = quantize_int8(g)
+        qs = jax.lax.all_gather(q, axis_name)          # int8 on the wire
+        ss = jax.lax.all_gather(scale, axis_name)      # (n,) f32 scales
+        deq = qs.astype(jnp.float32) * ss.reshape((n,) + (1,) * g.ndim)
+        return (jnp.sum(deq, axis=0) / n).astype(g.dtype)
+
+    fn = {"none": none_, "bf16": bf16_, "int8": int8_}[method]
+    return jax.tree.map(fn, grads)
+
+
+def multipod_train_step(model, mesh, method: str = "bf16"):
+    """Wrap a Model's train step with explicit compressed cross-pod sync.
+
+    Requires a mesh with a ``pod`` axis. Params/opt-state are replicated
+    across pods (their data/model sharding stays with the auto axes);
+    the batch is split across pods; each pod computes local gradients, the
+    compressed sync averages them, and every pod applies the identical
+    update.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import transformer as tfm
+    from repro.optim.optimizers import clip_by_global_norm
+
+    assert "pod" in mesh.shape, "multipod_train_step needs a 'pod' axis"
+    cfg, run, rules = model.cfg, model.run, dict(model.rules)
+    # inside the manual-pod region, activation constraints must not
+    # reference the pod axis
+    rules["act_batch"] = ("data",)
+    opt_update, schedule = model.opt_update, model.schedule
+
+    def per_pod(params, opt_state, batch):
+        def loss_fn(p):
+            return tfm.forward_train(cfg, run, p, batch, rules)
+
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads = sync_grads(grads, "pod", method)
+        grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+        lr = schedule(opt_state["step"] + 1)
+        params, opt_state = opt_update(params, grads, opt_state, lr=lr)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return jax.shard_map(
+        per_pod, mesh=mesh,
+        in_specs=(P(), P(), P("pod")),
+        out_specs=(P(), P(), P()),
+        axis_names={"pod"}, check_vma=False)

@@ -1,0 +1,155 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor.
+
+Both operate on arbitrary pytrees; optimizer state mirrors the param tree so
+the same logical-axis sharding rules apply leaf-wise (FSDP shards optimizer
+state exactly like its parameter — ZeRO). ``opt_state_dtype=bfloat16`` halves
+state HBM for the biggest archs (deepseek-v3).
+
+Adafactor keeps factored second moments (row/col) for matrices — O(n+m)
+instead of O(nm) state — the memory-sane choice for 671B-class models.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), grads), g
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, state_dtype: str = "float32"):
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    step = state["step"] + 1
+    sf = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** sf
+    c2 = 1.0 - b2 ** sf
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu32 = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+        nu32 = b2 * nu.astype(jnp.float32) + (1 - b2) * g32 * g32
+        update = (mu32 / c1) / (jnp.sqrt(nu32 / c2) + eps)
+        # decoupled weight decay on >=2-D weights only
+        if p.ndim >= 2:
+            update = update + weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return newp, mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(*t) for t in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; state ~ params/edge-dims)
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    # ndim-only so it agrees with opt_state_axes (which sees axes, not sizes)
+    return len(shape) >= 2
+
+
+def adafactor_init(params, state_dtype: str = "float32"):
+    dt = jnp.dtype(state_dtype)
+
+    def init(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], dt),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt)}
+        return {"v": jnp.zeros(p.shape, dt)}
+
+    return {"v": jax.tree.map(init, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, *, lr, decay=0.8, eps=1e-30,
+                     clip_threshold=1.0, weight_decay=0.0):
+    step = state["step"] + 1
+    sf = step.astype(jnp.float32)
+    beta = 1.0 - sf ** (-decay)
+
+    def upd(p, g, v):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p.shape):
+            vr = beta * v["vr"].astype(jnp.float32) + (1 - beta) * jnp.mean(g2, -1)
+            vc = beta * v["vc"].astype(jnp.float32) + (1 - beta) * jnp.mean(g2, -2)
+            denom = jnp.sqrt(vr[..., None] * vc[..., None, :]
+                             / jnp.maximum(jnp.mean(vr, -1, keepdims=True), eps)[..., None])
+            nv = {"vr": vr.astype(v["vr"].dtype), "vc": vc.astype(v["vc"].dtype)}
+        else:
+            vf = beta * v["v"].astype(jnp.float32) + (1 - beta) * g2
+            denom = jnp.sqrt(vf)
+            nv = {"v": vf.astype(v["v"].dtype)}
+        u = g32 / jnp.maximum(denom, eps)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        if p.ndim >= 2 and weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nv
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(*t) for t in zip(flat_p, flat_g, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_p, {"v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+def make_optimizer(name: str, *, state_dtype="float32", weight_decay=0.1):
+    if name == "adamw":
+        init = functools.partial(adamw_init, state_dtype=state_dtype)
+        update = functools.partial(adamw_update, weight_decay=weight_decay)
+    elif name == "adafactor":
+        init = functools.partial(adafactor_init, state_dtype=state_dtype)
+        update = functools.partial(adafactor_update, weight_decay=weight_decay)
+    else:
+        raise ValueError(name)
+    return init, update
+
+
+def opt_state_axes(opt_name: str, param_axes):
+    """Logical axes for the optimizer state tree (mirrors params)."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    if opt_name == "adamw":
+        return {"mu": param_axes, "nu": param_axes, "step": ()}
+    # adafactor: factored leaves drop the last / second-to-last axis
+    def fac(ax):
+        if len(ax) >= 2:
+            return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+        return {"v": ax}
+    return {"v": jax.tree.map(fac, param_axes, is_leaf=is_axes), "step": ()}

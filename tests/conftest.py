@@ -1,0 +1,44 @@
+import os
+import sys
+
+# Tests must see the default (single) CPU device — only the dry-run sets
+# xla_force_host_platform_device_count (see launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeProfile
+
+
+def tiny_dense(**kw):
+    base = dict(name="tiny", family="dense", n_layers=2, d_model=32,
+                n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=128,
+                dtype="float32", param_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture
+def dense_cfg():
+    return tiny_dense()
+
+
+@pytest.fixture
+def train_shape():
+    return ShapeProfile("t", 16, 2, "train")
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_emerald(policy="annotate", **kw):
+    from repro.core import (CostModel, EmeraldExecutor, MDSS,
+                            MigrationManager, default_tiers)
+    tiers = default_tiers()
+    cm = CostModel(tiers)
+    mdss = MDSS(tiers, cost_model=cm)
+    mgr = MigrationManager(tiers, mdss, cm)
+    return tiers, cm, mdss, mgr

@@ -1,0 +1,60 @@
+"""Data-pipeline tests: determinism, shapes, modality stubs."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeProfile, reduced
+from repro.data.pipeline import (SyntheticLMData, batch_logical_axes,
+                                 make_batch_specs, token_batch_shapes)
+
+
+def test_deterministic_per_step():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    sp = ShapeProfile("t", 32, 4, "train")
+    d1 = SyntheticLMData(cfg, sp, seed=3)
+    d2 = SyntheticLMData(cfg, sp, seed=3)
+    b1, b2 = d1.batch(17), d2.batch(17)
+    for k in b1:
+        np.testing.assert_array_equal(np.asarray(b1[k]), np.asarray(b2[k]))
+    b3 = d1.batch(18)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_tokens_in_vocab():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    sp = ShapeProfile("t", 64, 2, "train")
+    b = SyntheticLMData(cfg, sp).batch(0)
+    toks = np.asarray(b["tokens"])
+    assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+
+
+def test_vlm_batch_has_frontend_stub():
+    cfg = reduced(get_config("internvl2-1b"))
+    sp = ShapeProfile("t", 32, 2, "train")
+    shapes = token_batch_shapes(cfg, sp)
+    assert shapes["frontend_embeds"] == (2, cfg.frontend_tokens, cfg.d_model)
+    assert shapes["tokens"] == (2, 32 - cfg.frontend_tokens)
+    b = SyntheticLMData(cfg, sp).batch(0)
+    assert b["frontend_embeds"].shape == shapes["frontend_embeds"]
+
+
+def test_encdec_batch_has_encoder_stub():
+    cfg = reduced(get_config("seamless-m4t-medium"))
+    sp = ShapeProfile("t", 32, 2, "train")
+    shapes = token_batch_shapes(cfg, sp)
+    assert shapes["encoder_embeds"] == (2, 32, cfg.d_model)
+    assert shapes["tokens"] == (2, 32)
+
+
+def test_specs_match_real_batches():
+    for arch in ("tinyllama-1.1b", "internvl2-1b", "seamless-m4t-medium"):
+        cfg = reduced(get_config(arch))
+        sp = ShapeProfile("t", 32, 2, "train")
+        specs = make_batch_specs(cfg, sp)
+        batch = SyntheticLMData(cfg, sp).batch(0)
+        assert set(specs) == set(batch)
+        for k in specs:
+            assert specs[k].shape == batch[k].shape, (arch, k)
+            assert specs[k].dtype == batch[k].dtype, (arch, k)
+        axes = batch_logical_axes(cfg, sp)
+        for k in axes:
+            assert len(axes[k]) == len(specs[k].shape)

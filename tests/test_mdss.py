@@ -1,0 +1,148 @@
+"""MDSS tests: versioning, lazy sync, last-writer-wins, byte accounting —
+plus hypothesis property tests against a shadow model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CostModel, MDSS, default_tiers
+
+TIERS = ("local", "cloud", "cloud2")
+
+
+def make_mdss():
+    tiers = default_tiers()
+    return MDSS(tiers, cost_model=CostModel(tiers))
+
+
+def test_put_get_roundtrip():
+    m = make_mdss()
+    m.put("a", np.arange(4), tier="local")
+    assert np.array_equal(m.get("a", "local"), np.arange(4))
+
+
+def test_get_syncs_from_freshest_tier():
+    m = make_mdss()
+    m.put("a", np.arange(4), tier="local")
+    got = m.get("a", "cloud")
+    assert np.array_equal(got, np.arange(4))
+    assert m.has_latest("a", "cloud")
+    assert m.total_bytes_moved() == np.arange(4).nbytes
+
+
+def test_code_only_fast_path_no_bytes():
+    m = make_mdss()
+    m.put("a", np.arange(4), tier="local")
+    m.ensure(["a"], "cloud")
+    before = m.total_bytes_moved()
+    m.ensure(["a"], "cloud")      # already latest -> nothing moves
+    assert m.total_bytes_moved() == before
+
+
+def test_stale_after_new_version():
+    m = make_mdss()
+    m.put("a", np.arange(4), tier="local")
+    m.ensure(["a"], "cloud")
+    m.put("a", np.arange(8), tier="local")       # new version locally
+    assert not m.has_latest("a", "cloud")
+    assert m.stale_bytes(["a"], "cloud") == np.arange(8).nbytes
+    assert np.array_equal(m.get("a", "cloud"), np.arange(8))
+
+
+def test_last_writer_wins_synchronize():
+    m = make_mdss()
+    m.put("a", np.zeros(2), tier="local")
+    m.put("a", np.ones(2), tier="cloud")          # later write on cloud wins
+    m.synchronize("a")
+    assert np.array_equal(m.get("a", "local"), np.ones(2))
+    assert np.array_equal(m.get("a", "cloud"), np.ones(2))
+
+
+def test_version_monotonic():
+    m = make_mdss()
+    vs = [m.put("a", np.zeros(1), tier=t) for t in ("local", "cloud", "local")]
+    assert vs == sorted(vs) and len(set(vs)) == 3
+
+
+def test_pytree_values():
+    m = make_mdss()
+    tree = {"w": np.ones((2, 2)), "b": np.zeros(2)}
+    m.put("params", tree, tier="local")
+    got = m.get("params", "cloud")
+    assert np.array_equal(got["w"], tree["w"])
+    assert m.total_bytes_moved() == 4 * 8 + 2 * 8
+
+
+def test_modeled_seconds_accumulate():
+    m = make_mdss()
+    m.put("a", np.zeros(1024), tier="local")
+    m.get("a", "cloud")
+    assert m.modeled_seconds > 0
+
+
+# ---------------------------------------------------------------------------
+# Property-based: arbitrary op sequences vs a shadow model.
+# ---------------------------------------------------------------------------
+
+ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("put"), st.sampled_from(["u1", "u2"]),
+                  st.sampled_from(TIERS), st.integers(0, 100)),
+        st.tuples(st.just("get"), st.sampled_from(["u1", "u2"]),
+                  st.sampled_from(TIERS)),
+        st.tuples(st.just("sync"), st.sampled_from(["u1", "u2"])),
+    ),
+    min_size=1, max_size=30)
+
+
+@settings(max_examples=200, deadline=None)
+@given(ops)
+def test_mdss_matches_shadow(op_seq):
+    m = make_mdss()
+    shadow = {}                      # uri -> latest payload
+    seeded = set()
+    for op in op_seq:
+        if op[0] == "put":
+            _, uri, tier, val = op
+            m.put(uri, np.full(3, val), tier=tier)
+            shadow[uri] = val
+            seeded.add(uri)
+        elif op[0] == "get":
+            _, uri, tier = op
+            if uri not in seeded:
+                with pytest.raises(KeyError):
+                    m.get(uri, tier)
+            else:
+                got = m.get(uri, tier)
+                assert np.array_equal(got, np.full(3, shadow[uri]))
+                assert m.has_latest(uri, tier)
+        else:
+            _, uri = op
+            if uri in seeded:
+                m.synchronize(uri)
+    # final: synchronize converges every replica to the latest version
+    m.synchronize()
+    for uri in seeded:
+        for t in TIERS:
+            if m._entries[uri].copies.get(t) is not None:
+                assert np.array_equal(m.get(uri, t), np.full(3, shadow[uri]))
+
+
+@settings(max_examples=100, deadline=None)
+@given(ops)
+def test_mdss_bytes_never_negative_and_code_only_stable(op_seq):
+    m = make_mdss()
+    seeded = set()
+    for op in op_seq:
+        if op[0] == "put":
+            _, uri, tier, val = op
+            m.put(uri, np.full(3, val), tier=tier)
+            seeded.add(uri)
+        elif op[0] == "get" and op[1] in seeded:
+            m.get(op[1], op[2])
+    assert all(v >= 0 for v in m.bytes_moved.values())
+    # ensure() twice in a row never moves bytes the second time
+    for uri in seeded:
+        m.ensure([uri], "cloud")
+        before = m.total_bytes_moved()
+        m.ensure([uri], "cloud")
+        assert m.total_bytes_moved() == before

@@ -1,0 +1,183 @@
+"""Model-layer unit tests: MoE dispatch equivalence, vocab/head padding,
+MLA absorbed decode, attention oracles, stage compression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import (ATTN_DENSE, ATTN_MOE, MAMBA_DENSE, MAMBA_MOE,
+                                MAMBA_ONLY, ModelConfig)
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models.layers import xent_loss
+from repro.models.params import init_params
+from repro.parallel.sharding import get_rules
+from tests.conftest import tiny_dense
+
+RULES = get_rules("fsdp")
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def moe_cfg(**kw):
+    base = dict(name="m", family="moe", n_layers=1, d_model=16, n_heads=2,
+                n_kv_heads=0, d_ff=0, vocab_size=16, n_experts=8,
+                experts_per_token=2, moe_d_ff=8, dtype="float32",
+                param_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("E,K,shared", [(8, 2, 0), (8, 2, 1), (4, 1, 2),
+                                        (6, 3, 0)])
+def test_moe_sort_matches_gshard(E, K, shared):
+    cfg = moe_cfg(n_experts=E, experts_per_token=K, n_shared_experts=shared)
+    p = init_params(M.moe_template(cfg), jax.random.PRNGKey(0), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y1, a1 = M.moe(cfg, p, x, RULES)
+    y2, a2 = M.moe_gshard(cfg, p, x, RULES)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    assert float(abs(a1 - a2)) < 1e-7
+
+
+def test_moe_capacity_drops_tokens_consistently():
+    """With capacity binding, both impls drop the same assignments."""
+    cfg = moe_cfg(n_experts=2, experts_per_token=2)   # forces congestion
+    p = init_params(M.moe_template(cfg), jax.random.PRNGKey(0), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 32, cfg.d_model))
+    y1, _ = M.moe(cfg, p, x, RULES)
+    y2, _ = M.moe_gshard(cfg, p, x, RULES)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_moe_grad_finite():
+    cfg = moe_cfg(n_shared_experts=1)
+    p = init_params(M.moe_template(cfg), jax.random.PRNGKey(0), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+
+    def loss(p):
+        y, aux = M.moe(cfg, p, x, RULES)
+        return jnp.sum(y ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    for leaf in jax.tree.leaves(g):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_moe_aux_loss_uniform_router_is_one():
+    """With perfectly uniform routing, Switch aux = weight * 1.0."""
+    cfg = moe_cfg(router_aux_weight=1.0)
+    p = init_params(M.moe_template(cfg), jax.random.PRNGKey(0), "float32")
+    p = dict(p, router=jnp.zeros_like(p["router"]))  # uniform probs
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    _, aux = M.moe(cfg, p, x, RULES)
+    # f_e sums to K (each token routed K times): aux = E * sum(f_e*p_e)
+    assert abs(float(aux) - cfg.experts_per_token) < 0.3
+
+
+# ---------------------------------------------------------------------------
+# Padding
+# ---------------------------------------------------------------------------
+
+def test_vocab_padding_loss_matches_unpadded():
+    cfg_pad = tiny_dense(vocab_size=100, pad_multiple=8)   # -> 104
+    assert cfg_pad.vocab_padded == 104
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 104))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 100)
+    loss_pad = xent_loss(cfg_pad, logits, labels)
+    cfg_nopad = tiny_dense(vocab_size=100, pad_multiple=1)
+    loss_ref = xent_loss(cfg_nopad, logits[..., :100], labels)
+    np.testing.assert_allclose(float(loss_pad), float(loss_ref), rtol=1e-6)
+
+
+def test_head_padding_counts():
+    cfg = tiny_dense(n_heads=6, n_kv_heads=2, pad_multiple=4)
+    assert cfg.heads_padded == 8
+    assert cfg.kv_heads_padded == 2        # 2 divides 8
+    assert cfg.q_group == 4
+    cfg2 = tiny_dense(n_heads=40, n_kv_heads=40, pad_multiple=16)
+    assert cfg2.heads_padded == 48 and cfg2.kv_heads_padded == 48
+
+
+def test_padded_heads_with_zero_wo_contribute_nothing():
+    cfg = tiny_dense(n_heads=6, n_kv_heads=2, pad_multiple=4)
+    p = init_params(A.gqa_template(cfg), jax.random.PRNGKey(0), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    # zero the padded heads' output rows; then their wq values are irrelevant
+    wo = p["wo"].at[6:].set(0.0)
+    p1 = dict(p, wo=wo)
+    y1, _ = A.gqa_full(cfg, p1, x, RULES)
+    p2 = dict(p1, wq=p1["wq"].at[:, 6:, :].set(123.0))
+    y2, _ = A.gqa_full(cfg, p2, x, RULES)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MLA
+# ---------------------------------------------------------------------------
+
+def mla_cfg():
+    return tiny_dense(attn_type="mla", q_lora_rank=16, kv_lora_rank=8,
+                      qk_nope_head_dim=8, qk_rope_head_dim=4, v_head_dim=8)
+
+
+def test_mla_absorbed_decode_matches_full():
+    """Absorbed-latent decode == expanded full attention at the last pos."""
+    cfg = mla_cfg()
+    p = init_params(A.mla_template(cfg), jax.random.PRNGKey(0), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, cfg.d_model)) * 0.3
+    full_out, _ = A.mla_full(cfg, p, x, RULES)
+    # decode path: prefill first 8 tokens, then decode token 9
+    cache = {
+        "ckv": jnp.zeros((2, 16, cfg.kv_lora_rank)),
+        "krope": jnp.zeros((2, 16, cfg.qk_rope_head_dim)),
+        "pos": jnp.int32(0),
+    }
+    _, cache = A.mla_full(cfg, p, x[:, :8], RULES, cache=cache)
+    dec_out, _ = A.mla_decode(cfg, p, x[:, 8:9], cache, RULES)
+    np.testing.assert_allclose(np.asarray(dec_out[:, 0]),
+                               np.asarray(full_out[:, 8]), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Stage compression (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 64), st.integers(0, 3))
+def test_stage_compression_reconstructs_block_types(n_layers, kind):
+    if kind == 0:
+        cfg = tiny_dense(n_layers=n_layers)
+    elif kind == 1:
+        cfg = tiny_dense(n_layers=n_layers, family="moe", n_experts=4,
+                         experts_per_token=2, moe_d_ff=8,
+                         moe_layer_period=2, moe_layer_offset=1)
+    elif kind == 2:
+        cfg = tiny_dense(n_layers=n_layers, family="hybrid", ssm_state=4,
+                         dt_rank=4, attn_layer_period=8, attn_layer_offset=4,
+                         n_experts=4, experts_per_token=2, moe_d_ff=8,
+                         moe_layer_period=2, moe_layer_offset=1)
+    else:
+        cfg = tiny_dense(n_layers=n_layers, family="moe", n_experts=4,
+                         experts_per_token=2, moe_d_ff=8,
+                         first_dense_layers=min(3, n_layers))
+    rebuilt = []
+    for pattern, reps in cfg.stages():
+        rebuilt.extend(list(pattern) * reps)
+    assert rebuilt == [cfg.block_type(i) for i in range(n_layers)]
+
+
+def test_jamba_pattern():
+    cfg = tiny_dense(family="hybrid", n_layers=32, ssm_state=4, dt_rank=4,
+                     attn_layer_period=8, attn_layer_offset=4,
+                     n_experts=4, experts_per_token=2, moe_d_ff=8,
+                     moe_layer_period=2, moe_layer_offset=1)
+    types = [cfg.block_type(i) for i in range(32)]
+    assert types[4] == ATTN_DENSE and types[12] == ATTN_DENSE
+    assert sum(1 for t in types if t in (ATTN_DENSE, ATTN_MOE)) == 4
+    assert sum(1 for t in types if t in (MAMBA_MOE, ATTN_MOE)) == 16

@@ -1,0 +1,115 @@
+"""Partitioner unit tests: legality properties P1-P3 + migration points."""
+import pytest
+
+from repro.core import (MigrationPoint, PartitionError, Workflow, partition)
+
+
+def simple_wf(remotables=("b",)):
+    wf = Workflow("w")
+    wf.var("x")
+    wf.step("a", lambda x: {"y": x}, inputs=("x",), outputs=("y",),
+            remotable="a" in remotables)
+    wf.step("b", lambda y: {"z": y}, inputs=("y",), outputs=("z",),
+            remotable="b" in remotables)
+    wf.step("c", lambda z: {"w": z}, inputs=("z",), outputs=("w",),
+            remotable="c" in remotables)
+    return wf
+
+
+def test_migration_point_inserted_before_each_remotable():
+    pwf = partition(simple_wf(remotables=("a", "c")))
+    names = [s.name for s in pwf.sequence]
+    assert names == ["__migrate__a", "a", "b", "__migrate__c", "c"]
+    assert len(pwf.migration_points) == 2
+
+
+def test_no_remotable_no_migration_points():
+    pwf = partition(simple_wf(remotables=()))
+    assert pwf.migration_points == []
+    assert [s.name for s in pwf.sequence] == ["a", "b", "c"]
+
+
+def test_property1_local_hardware():
+    wf = Workflow("w")
+    wf.var("x")
+    wf.step("gpu_step", lambda x: {"y": x}, inputs=("x",), outputs=("y",),
+            remotable=True, requires_local_hardware=True)
+    with pytest.raises(PartitionError) as e:
+        partition(wf)
+    assert e.value.prop == 1
+
+
+def test_property1_local_hardware_ok_when_not_remotable():
+    wf = Workflow("w")
+    wf.var("x")
+    wf.step("gpu_step", lambda x: {"y": x}, inputs=("x",), outputs=("y",),
+            remotable=False, requires_local_hardware=True)
+    partition(wf)  # fine
+
+
+def test_property2_variable_scope():
+    wf = Workflow("w")
+    wf.var("x")
+    wf.step("s1", lambda x: {"hidden": x}, inputs=("x",), outputs=("hidden",))
+    wf.variables["hidden"].scope = ("s1",)       # declared inside s1
+    wf.step("s2", lambda hidden: {"o": hidden}, inputs=("hidden",),
+            outputs=("o",), remotable=True)
+    with pytest.raises(PartitionError) as e:
+        partition(wf)
+    assert e.value.prop == 2
+
+
+def test_property2_nested_step_sibling_vars_ok():
+    wf = Workflow("w")
+    wf.var("x")
+    wf.step("outer", lambda x: {"y": x}, inputs=("x",), outputs=("y",))
+    wf.step("inner", lambda: {"v": 1}, parent="outer", outputs=("v",),
+            remotable=True)
+    # v is declared at inner's level (inside outer) -> legal for inner
+    partition(wf)
+
+
+def test_property3_nested_offloading():
+    wf = Workflow("w")
+    wf.var("x")
+    wf.step("outer", lambda x: {"y": x}, inputs=("x",), outputs=("y",),
+            remotable=True)
+    wf.step("inner", lambda: {"v": 1}, parent="outer", outputs=("v",),
+            remotable=True)
+    with pytest.raises(PartitionError) as e:
+        partition(wf)
+    assert e.value.prop == 3
+
+
+def test_undeclared_input_rejected():
+    wf = Workflow("w")
+    wf.step("s", lambda q: {"y": q}, inputs=("q",), outputs=("y",))
+    with pytest.raises(Exception):
+        partition(wf)
+
+
+def test_partition_idempotent_structure():
+    wf = simple_wf()
+    p1 = partition(wf)
+    p2 = partition(wf)
+    assert [s.name for s in p1.sequence] == [s.name for s in p2.sequence]
+
+
+def test_dependencies_dataflow():
+    wf = Workflow("w")
+    wf.var("x")
+    wf.step("a", lambda x: {"y": x}, inputs=("x",), outputs=("y",))
+    wf.step("b", lambda x: {"z": x}, inputs=("x",), outputs=("z",))
+    wf.step("c", lambda y, z: {"w": y}, inputs=("y", "z"), outputs=("w",))
+    deps = wf.dependencies()
+    assert deps["a"] == set() and deps["b"] == set()
+    assert deps["c"] == {"a", "b"}
+
+
+def test_write_after_write_ordering():
+    wf = Workflow("w")
+    wf.var("m")
+    wf.step("a", lambda m: {"m": m}, inputs=("m",), outputs=("m",))
+    wf.step("b", lambda m: {"m": m}, inputs=("m",), outputs=("m",))
+    deps = wf.dependencies()
+    assert deps["b"] == {"a"}

@@ -1,0 +1,84 @@
+"""Roofline/HLO-analysis unit tests (parser correctness on crafted HLO)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.launch.hlo_analysis import collective_bytes, _shape_bytes
+from repro.launch.roofline import (attention_flops, matmul_param_counts,
+                                   model_flops, roofline_terms)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,256]{1,0}") == 16 * 256 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(f32[4,4], bf16[2,2])") == 64 + 8
+    assert _shape_bytes("pred[10]") == 10
+
+
+HLO = """
+  %ag = f32[1024,256]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %ar = bf16[128]{0} all-reduce(%y), replica_groups=[4,64]<=[256], to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = f32[32,32]{1,0} all-to-all(%w), replica_groups=[2,8]<=[16]
+  %cp = f32[16]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %agd = f32[9]{0} all-gather-done(%ag2)
+  %dot = f32[16,256]{1,0} dot(%a, %b)
+"""
+
+
+def test_collective_parser():
+    out = collective_bytes(HLO)
+    g = 16
+    assert np.isclose(out["all-gather"], 1024 * 256 * 4 * (g - 1) / g)
+    assert np.isclose(out["all-reduce"], 2 * 128 * 2 * 63 / 64)
+    assert np.isclose(out["reduce-scatter"], 64 * 4 * 3)     # (g-1)*result
+    assert np.isclose(out["all-to-all"], 32 * 32 * 4 * 7 / 8)
+    assert np.isclose(out["collective-permute"], 16 * 4)
+    # -done lines are not double counted
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_collective_parser_start_counted_once():
+    txt = "%s = f32[8]{0} all-reduce-start(%x), replica_groups=[2,2]<=[4]\n" \
+          "%d = f32[8]{0} all-reduce-done(%s)\n"
+    out = collective_bytes(txt)
+    assert np.isclose(out["all-reduce"], 2 * 32 * 1 / 2)
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(197e12, 819e7, 50e7)     # 1s compute, 0.01s others
+    assert t["dominant"] == "compute_s"
+    assert np.isclose(t["compute_s"], 1.0)
+    t2 = roofline_terms(1, 1, 50e9)
+    assert t2["dominant"] == "collective_s" and np.isclose(t2["collective_s"], 1.0)
+
+
+def test_param_counts_sane():
+    total, active = matmul_param_counts(get_config("tinyllama-1.1b"))
+    assert 0.9e9 < total < 1.3e9
+    assert total == active                      # dense: all params active
+    t_moe, a_moe = matmul_param_counts(get_config("deepseek-v3-671b"))
+    assert 600e9 < t_moe < 750e9
+    assert 25e9 < a_moe < 50e9                  # ~37B active
+
+
+def test_model_flops_train_scale():
+    cfg = get_config("tinyllama-1.1b")
+    mf = model_flops(cfg, SHAPES["train_4k"])
+    # 6*N*D with N~1.1e9, D=1.05e6 -> ~6.9e15 plus attention
+    assert 6e15 < mf < 1.1e16
+
+
+def test_model_flops_decode_much_smaller():
+    cfg = get_config("tinyllama-1.1b")
+    mf_d = model_flops(cfg, SHAPES["decode_32k"])
+    mf_t = model_flops(cfg, SHAPES["train_4k"])
+    assert mf_d < mf_t / 1000
+
+
+def test_attention_flops_quadratic_in_seq():
+    cfg = get_config("llama3.2-3b")
+    f1 = attention_flops(cfg, 1, 1024, "train")
+    f2 = attention_flops(cfg, 1, 2048, "train")
+    assert np.isclose(f2 / f1, 4.0, rtol=0.01)

@@ -1,0 +1,42 @@
+"""Property-based tests for sharding resolution invariants."""
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import PRESETS, resolve
+from tests.test_sharding import FakeMesh
+
+MESHES = [FakeMesh({"data": 16, "model": 16}),
+          FakeMesh({"pod": 2, "data": 16, "model": 16}),
+          FakeMesh({"data": 4, "model": 2})]
+
+LOGICAL = [None, "embed", "ff", "vocab", "heads", "kv_heads", "experts",
+           "act_batch", "act_ff", "act_kv_seq", "ssm_inner", "moe_ff"]
+
+dims = st.lists(
+    st.tuples(st.sampled_from(LOGICAL), st.integers(1, 8192)),
+    min_size=1, max_size=5)
+
+
+@settings(max_examples=300, deadline=None)
+@given(dims, st.sampled_from(list(PRESETS)), st.integers(0, 2))
+def test_resolve_invariants(dims_, preset, mesh_i):
+    mesh = MESHES[mesh_i]
+    axes = tuple(d[0] for d in dims_)
+    shape = tuple(d[1] for d in dims_)
+    spec = resolve(PRESETS[preset], axes, shape, mesh)
+    # 1. spec rank never exceeds tensor rank
+    assert len(spec) <= len(shape)
+    used = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for n in names:
+            assert n in mesh.shape          # 2. only real mesh axes
+            used.append(n)
+            prod *= mesh.shape[n]
+        # 3. divisibility always holds
+        assert shape[i] % prod == 0, (axes, shape, spec)
+    # 4. each mesh axis used at most once
+    assert len(used) == len(set(used))

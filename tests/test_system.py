@@ -1,0 +1,89 @@
+"""End-to-end behaviour tests for the paper's system (Emerald).
+
+These exercise the full pipeline the paper describes: annotated workflow ->
+partitioner -> migration manager + MDSS -> distributed execution — plus the
+LM substrate driven through it (train + serve).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig, ShapeProfile, reduced
+from repro.core import (CostModel, EmeraldExecutor, MDSS, MigrationManager,
+                        Workflow, default_tiers, partition)
+from repro.launch.serve import Request, Server
+from repro.launch.train import Trainer
+
+
+def test_lm_training_through_emerald_learns(tmp_path):
+    cfg = reduced(get_config("tinyllama-1.1b"), n_layers=2)
+    run = RunConfig(model=cfg, shape=ShapeProfile("t", 64, 4, "train"),
+                    remat="none", learning_rate=3e-3)
+    tr = Trainer(run)
+    hist = tr.fit(40, log_every=0)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.3
+    rep = tr.transfer_report()
+    assert rep["offloads"] == 40
+    # params uploaded once; per-step traffic is just the batch
+    up = rep["bytes_moved"][("local", "cloud")]
+    n_params_bytes = sum(x.nbytes for x in jax.tree.leaves(
+        tr.model.init_params(jax.random.PRNGKey(0))))
+    batch_bytes = sum(np.asarray(v).nbytes for v in tr.data.batch(0).values())
+    overhead = up - (2 * n_params_bytes + 40 * batch_bytes)
+    assert overhead < n_params_bytes + 65536, "params re-uploaded every step?"
+
+
+def test_train_offload_matches_local_exactly():
+    """Offloaded training == local training, step for step."""
+    cfg = reduced(get_config("tinyllama-1.1b"), n_layers=2)
+    run = RunConfig(model=cfg, shape=ShapeProfile("t", 32, 2, "train"),
+                    remat="none")
+    h_cloud = Trainer(run, policy="annotate").fit(5, log_every=0)
+    h_local = Trainer(run, policy="never").fit(5, log_every=0)
+    for a, b in zip(h_cloud, h_local):
+        np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-6)
+
+
+def test_serving_through_emerald():
+    cfg = reduced(get_config("tinyllama-1.1b"), n_layers=2)
+    run = RunConfig(model=cfg, shape=ShapeProfile("s", 64, 4, "decode"),
+                    remat="none")
+    from repro.models.model_zoo import Model
+    params = Model(run).init_params(jax.random.PRNGKey(0))
+    srv = Server(run, params)
+    rng = np.random.default_rng(0)
+    for rid in range(4):
+        srv.submit(Request(rid, rng.integers(0, cfg.vocab_size, 10,
+                                             ).astype(np.int32), max_new=6))
+    done = srv.step_batch()
+    assert len(done) == 4
+    assert all(len(r.tokens) == 6 for r in done)
+    rep = srv.transfer_report()
+    assert rep["decode_offloads"] >= 5
+    # decode steps move only tokens, never params/caches
+    assert rep["bytes_moved"].get(("cloud", "local"), 0) < 1e6
+
+
+def test_multi_step_dag_workflow_through_emerald():
+    """Diamond DAG with parallel remotable branches (paper Fig 9b)."""
+    tiers = default_tiers()
+    cm = CostModel(tiers)
+    mdss = MDSS(tiers, cost_model=cm)
+    mgr = MigrationManager(tiers, mdss, cm)
+    wf = Workflow("diamond")
+    wf.var("x")
+    wf.step("src", lambda x: {"a": x + 1}, inputs=("x",), outputs=("a",))
+    wf.step("l", lambda a: {"b": a * 2}, inputs=("a",), outputs=("b",),
+            remotable=True)
+    wf.step("r", lambda a: {"c": a * 3}, inputs=("a",), outputs=("c",),
+            remotable=True)
+    wf.step("sink", lambda b, c: {"y": b + c}, inputs=("b", "c"),
+            outputs=("y",))
+    ex = EmeraldExecutor(partition(wf), mgr)
+    out = ex.run({"x": jnp.float32(1.0)})
+    assert float(out["y"]) == 2 * 2 + 2 * 3
+    # both branches offloaded; 'a' moved to the cloud exactly once
+    a_moves = [e for e in mdss.sync_events if e[0] == "a" and e[2] == "cloud"]
+    assert len(a_moves) == 1, "MDSS failed to share the cloud replica"

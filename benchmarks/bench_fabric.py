@@ -1,0 +1,105 @@
+"""Offload-fabric benchmarks: serialization overhead, wire throughput,
+and concurrent-offload scaling with pool size.
+
+Three sections:
+
+  * ``wire_encode/decode_*``      — pytree wire-format overhead (no I/O),
+  * ``fabric_ship_*``             — real loopback round-trips through a
+    worker process (observed wire bandwidth, what the cost model sees),
+  * ``fabric_throughput_NW``      — 2N fixed-duration busy tasks pushed
+    through pools of 1..4 workers; `derived` reports tasks/s and speedup
+    vs the 1-worker pool, demonstrating the scaling curve.
+
+``FABRIC_SMOKE=1`` shrinks sizes/counts so the whole module finishes in
+roughly ten seconds on two workers (scripts/smoke.sh uses this).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.cloud import Fabric
+from repro.cloud.wire import decode, encode
+
+SMOKE = bool(os.environ.get("FABRIC_SMOKE"))
+
+
+def _payload(n_floats: int):
+    return {"params": {"w": np.random.rand(n_floats).astype(np.float32),
+                       "b": np.random.rand(64).astype(np.float32)},
+            "meta": ("adam", 3, 0.1)}
+
+
+def bench_wire() -> List[str]:
+    rows = []
+    sizes = [1 << 12, 1 << 20] if not SMOKE else [1 << 12]
+    for n in sizes:
+        val = _payload(n)
+        nbytes = 4 * n
+        enc = timeit(lambda: encode(val), warmup=2, iters=10)
+        data = encode(val)
+        dec = timeit(lambda: decode(data), warmup=2, iters=10)
+        mb = nbytes / 1e6
+        rows.append(row(f"wire_encode_{mb:g}MB", enc,
+                        f"{nbytes / enc / 1e9:.2f}GB/s"))
+        rows.append(row(f"wire_decode_{mb:g}MB", dec,
+                        f"{nbytes / dec / 1e9:.2f}GB/s"))
+    return rows
+
+
+def bench_ship(fabric: Fabric) -> List[str]:
+    rows = []
+    sizes = [1 << 14, 1 << 20] if not SMOKE else [1 << 14]
+    for n in sizes:
+        val = _payload(n)
+        fabric.ship(val)                       # warm
+        t = timeit(lambda: fabric.ship(val), warmup=0, iters=5)
+        mb = 4 * n / 1e6
+        rows.append(row(f"fabric_ship_{mb:g}MB", t,
+                        f"{2 * 4 * n / t / 1e6:.1f}MB/s_roundtrip"))
+    bw = fabric.broker.observed_bandwidth()
+    if bw:
+        rows.append(row("fabric_observed_bw", 1.0 / bw * 1e6,
+                        f"{bw / 1e6:.1f}MB/s_ema"))
+    return rows
+
+
+def bench_throughput() -> List[str]:
+    """Fixed work (2*max_workers busy tasks) vs pool size: the scaling curve."""
+    rows = []
+    pool_sizes = (1, 2, 4)
+    task_s = 0.05 if SMOKE else 0.1
+    n_tasks = 2 * max(pool_sizes)
+    base = None
+    for n in pool_sizes:
+        with Fabric(workers=n) as f:
+            # warm the dispatch path
+            f.broker.submit(step="spin", kwargs={"seconds": 0.001}).result(30)
+            t0 = time.perf_counter()
+            tasks = [f.broker.submit(step="spin",
+                                     kwargs={"seconds": task_s})
+                     for _ in range(n_tasks)]
+            for t in tasks:
+                t.result(60)
+            dt = time.perf_counter() - t0
+        base = base or dt
+        rows.append(row(f"fabric_throughput_{n}w", dt / n_tasks,
+                        f"tasks_per_s={n_tasks / dt:.1f};"
+                        f"speedup={base / dt:.2f}x"))
+    return rows
+
+
+def main() -> List[str]:
+    rows = bench_wire()
+    with Fabric(workers=2) as fabric:
+        rows += bench_ship(fabric)
+    rows += bench_throughput()
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -5,6 +5,8 @@
   bench_parallel_offload Fig 9           (concurrent offloading)
   bench_partitioner      §3.1            (partitioner + runtime overhead)
   bench_lm_workflow      beyond-paper    (LM train/serve through Emerald)
+  bench_fabric           beyond-paper    (offload fabric: wire format,
+                                          ship bandwidth, worker scaling)
 
 Prints ``name,us_per_call,derived`` CSV. Roofline numbers come from the
 dry-run (see launch/dryrun.py), not from here — this container's CPU wall
@@ -17,12 +19,14 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (bench_at, bench_lm_workflow, bench_mdss,
-                            bench_parallel_offload, bench_partitioner)
+    from benchmarks import (bench_at, bench_fabric, bench_lm_workflow,
+                            bench_mdss, bench_parallel_offload,
+                            bench_partitioner)
     modules = [
         ("bench_mdss", bench_mdss),
         ("bench_parallel_offload", bench_parallel_offload),
         ("bench_partitioner", bench_partitioner),
+        ("bench_fabric", bench_fabric),
         ("bench_at", bench_at),
         ("bench_lm_workflow", bench_lm_workflow),
     ]

@@ -1,0 +1,73 @@
+"""Fabric quickstart: offload workflow steps into real worker processes.
+
+    PYTHONPATH=src python examples/fabric_quickstart.py
+
+Where examples/quickstart.py runs every "offload" in-process, this one
+attaches the Emerald offload fabric to the cloud tier: a broker
+dispatches remotable steps over loopback TCP to a pool of worker
+subprocesses, MDSS transfers ship real bytes through the RPCTransport,
+the cost model learns the observed wire bandwidth, and an autoscaler
+grows/shrinks the pool with the queue.
+"""
+import os
+import time
+
+import numpy as np
+
+from repro.cloud import AutoscalerConfig, Fabric, attach
+from repro.core import (CostModel, EmeraldExecutor, MDSS, MigrationManager,
+                        Workflow, default_tiers, partition)
+
+# 1. Register step implementations by name — every worker resolves these
+#    from repro.cloud.tasklib at task time (lambdas can't cross processes).
+#    Here we just use the built-in "add_one" and "matmul" steps.
+
+# 2. Declare the workflow. `remote_impl` names the registry entry; fn=None
+#    means the local fallback also resolves from the registry.
+wf = Workflow("fabric_quickstart")
+wf.var("a")
+wf.var("b")
+wf.step("multiply", None, inputs=("a", "b"), outputs=("c",),
+        remotable=True, jax_step=False, remote_impl="matmul")
+wf.step("norm", lambda c: {"score": np.linalg.norm(c)},
+        inputs=("c",), outputs=("score",), jax_step=False)
+
+# 3. Bring up the fabric: 2 workers now, autoscaling 1..4.
+with Fabric(workers=2,
+            autoscaler=AutoscalerConfig(min_workers=1, max_workers=4)) as fabric:
+    tiers = default_tiers()
+    cost = CostModel(tiers)
+    mdss = MDSS(tiers, cost_model=cost)
+    attach(tiers, fabric, mdss=mdss, cost_model=cost)   # cloud tier backed
+
+    ex = EmeraldExecutor(partition(wf), MigrationManager(tiers, mdss, cost))
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((256, 256)).astype(np.float32)
+    result = ex.run({"a": a, "b": a})
+
+    print(f"driver pid {os.getpid()}, worker pids {fabric.broker.worker_pids()}")
+    print(f"score: {result['score']:.3f}")
+    print("events:")
+    for e in ex.events:
+        extra = ""
+        if e.kind == "offload":
+            extra = (f"remote={e.info['remote']} pid={e.info['worker_pid']} "
+                     f"bytes_in={e.info['bytes_in']} "
+                     f"bytes_out={e.info['bytes_out']}")
+        print(f"  {e.kind:<8s} {e.step:<12s} {e.tier:<6s} {extra}")
+    print(f"mdss bytes moved: {dict(mdss.bytes_moved)}")
+    bw = {k: f"{v / 1e6:.1f}MB/s" for k, v in cost.measured_bw.items()}
+    print(f"observed wire bandwidth: {bw}")
+
+    # 4. Elasticity: flood the broker and let the autoscaler react.
+    tasks = [fabric.broker.submit(step="sleep", kwargs={"seconds": 0.2})
+             for _ in range(8)]
+    act = fabric.autoscaler.tick()
+    print(f"autoscaler after burst: {act}")
+    for t in tasks:
+        t.result(30)
+    time.sleep(0.1)
+    print(f"workers active={fabric.broker.num_workers()} "
+          f"(incl warm={fabric.broker.num_workers(include_warm=True)}), "
+          f"tasks done={fabric.broker.tasks_done}, "
+          f"requeued={fabric.broker.tasks_requeued}")

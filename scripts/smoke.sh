@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# PR smoke: tier-1 tests + a short offload-fabric benchmark on 2 workers.
+#
+#   ./scripts/smoke.sh
+#
+# FABRIC_SMOKE=1 shrinks bench_fabric's payload sizes and task counts so
+# the fabric section (spawn -> dispatch -> ship -> scaling curve) stays
+# around ten seconds while still exercising real worker processes.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== fabric smoke (2 workers) =="
+FABRIC_SMOKE=1 timeout 120 python - <<'EOF'
+import time
+from benchmarks import bench_fabric
+from repro.cloud import Fabric
+
+t0 = time.time()
+rows = bench_fabric.bench_wire()
+with Fabric(workers=2) as fabric:
+    rows += bench_fabric.bench_ship(fabric)
+    # quick 2-worker scaling sanity instead of the full 1/2/4 sweep
+    tasks = [fabric.broker.submit(step="spin", kwargs={"seconds": 0.05})
+             for _ in range(8)]
+    for t in tasks:
+        t.result(60)
+    assert fabric.broker.tasks_done >= 8
+print("\n".join(rows))
+print(f"# fabric smoke ok in {time.time() - t0:.1f}s")
+EOF
+echo "smoke OK"

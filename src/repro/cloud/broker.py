@@ -1,0 +1,364 @@
+"""Task broker: queues offloads, dispatches to workers, survives crashes.
+
+The broker is the cloud-side "service" of the paper's Emerald: it owns a
+FIFO task queue, a dispatcher thread that pairs queued tasks with idle
+workers, one reader thread per worker socket, and a monitor thread that
+watches heartbeats / process liveness. Failure semantics:
+
+  * a worker that dies (socket EOF, process exit, stale heartbeat) has
+    its in-flight task **requeued at the front** with the dead worker
+    excluded, up to ``max_attempts`` total placements — after that the
+    task's future gets ``WorkerLostError``;
+  * a clean remote exception comes back as ``RemoteStepError`` (the
+    worker survives and returns to the idle set);
+  * dead workers are replaced by default so capacity holds steady; the
+    autoscaler owns deliberate scale-up/down on top of that.
+
+Byte accounting: every framed message in either direction is counted,
+and ``ship`` round-trips (pure data movement, no compute) produce
+bandwidth samples — the observed-wire-bandwidth feed for the cost model.
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set
+
+from concurrent.futures import Future
+
+from repro.cloud.pool import WorkerHandle, WorkerPool
+from repro.cloud.wire import frame, recv_msg, send_msg
+
+
+class FabricError(RuntimeError):
+    """Base class for fabric-side task failures."""
+
+
+class RemoteStepError(FabricError):
+    """The step fn raised inside the worker (worker survived)."""
+
+
+class WorkerLostError(FabricError):
+    """The task's worker died and the requeue budget is exhausted."""
+
+
+@dataclass
+class Task:
+    task_id: int
+    kind: str                       # "task" | "ship"
+    step: Optional[str] = None      # registry name
+    fn_bytes: Optional[bytes] = None
+    kwargs: Optional[dict] = None
+    value: Any = None               # ship payload
+    max_attempts: int = 3
+    attempts: int = 0               # placements so far
+    exclude: Set[str] = field(default_factory=set)
+    future: Future = field(default_factory=Future)
+    # filled in by dispatch/completion
+    bytes_sent: int = 0
+    bytes_received: int = 0
+    seconds: float = 0.0
+    worker_pid: int = 0
+    _send_t: float = 0.0
+
+    def result(self, timeout: Optional[float] = None):
+        return self.future.result(timeout)
+
+
+class Broker:
+    def __init__(self, pool: WorkerPool, *, max_attempts: int = 3,
+                 heartbeat_timeout_s: float = 5.0, replace_dead: bool = True):
+        self.pool = pool
+        self.max_attempts = max_attempts
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.replace_dead = replace_dead
+        self._cond = threading.Condition()
+        self._queue: List[Task] = []
+        self._workers: Dict[str, WorkerHandle] = {}
+        self._inflight: Dict[str, Task] = {}
+        self._task_counter = 0
+        self._closed = False
+        # counters (all mutated under self._cond)
+        self.tasks_done = 0
+        self.tasks_requeued = 0
+        self.workers_lost = 0
+        self.warm_hits = 0
+        self.bytes_sent = 0
+        self.bytes_received = 0
+        self._bw_ema: Optional[float] = None       # bytes/s from ship ops
+        self._task_s_ema: Optional[float] = None   # seconds per task
+        self._threads: List[threading.Thread] = []
+        self._dispatcher = threading.Thread(target=self._dispatch_loop,
+                                            daemon=True, name="fabric-dispatch")
+        self._monitor = threading.Thread(target=self._monitor_loop,
+                                         daemon=True, name="fabric-monitor")
+        self._dispatcher.start()
+        self._monitor.start()
+
+    # ----------------------------------------------------------- submission
+    def submit(self, *, step: Optional[str] = None,
+               fn_bytes: Optional[bytes] = None, kwargs: Optional[dict] = None,
+               value: Any = None, kind: str = "task",
+               max_attempts: Optional[int] = None) -> Task:
+        if kind == "task" and not step and fn_bytes is None:
+            raise FabricError("task needs a registry step name or fn_bytes")
+        with self._cond:
+            if self._closed:   # checked under the lock: a task enqueued
+                raise FabricError("broker is shut down")   # mid-shutdown
+            self._task_counter += 1
+            t = Task(self._task_counter, kind, step=step, fn_bytes=fn_bytes,
+                     kwargs=kwargs, value=value,
+                     max_attempts=max_attempts or self.max_attempts)
+            self._queue.append(t)
+            self._cond.notify_all()
+        return t
+
+    def ship(self, value, timeout: Optional[float] = 60.0) -> Task:
+        """Round-trip ``value`` through a worker; returns the completed
+        task (``.value`` result, ``.bytes_sent/received``, ``.seconds``)."""
+        t = self.submit(kind="ship", value=value)
+        t.value = t.result(timeout)
+        return t
+
+    # -------------------------------------------------------------- workers
+    def add_worker(self) -> str:
+        """Revive a warm worker if one exists, else spawn a fresh process."""
+        with self._cond:
+            warm = [h for h in self._workers.values() if h.state == "warm"]
+            if warm:
+                h = min(warm, key=lambda w: w.warm_since)
+                h.state = "idle"
+                self.warm_hits += 1
+                self._cond.notify_all()
+                return h.worker_id
+        h = self.pool.spawn()
+        h.reader = threading.Thread(target=self._reader_loop, args=(h,),
+                                    daemon=True, name=f"fabric-read-{h.worker_id}")
+        with self._cond:
+            self._workers[h.worker_id] = h
+            self._cond.notify_all()
+        h.reader.start()
+        return h.worker_id
+
+    def start_workers(self, n: int):
+        """Bring up ``n`` workers; cold-starts run concurrently."""
+        if n <= 0:
+            return
+        if n == 1:
+            self.add_worker()
+            return
+        from concurrent.futures import ThreadPoolExecutor
+        with ThreadPoolExecutor(max_workers=n) as tp:
+            list(tp.map(lambda _: self.add_worker(), range(n)))
+
+    def retire_worker(self) -> Optional[str]:
+        """Park one idle worker as warm (not dispatched to, process kept
+        alive for cheap revival). Returns its id, or None if none idle."""
+        with self._cond:
+            for h in self._workers.values():
+                if h.state == "idle":
+                    h.state = "warm"
+                    h.warm_since = time.monotonic()
+                    return h.worker_id
+        return None
+
+    def reap_warm(self, ttl_s: float) -> int:
+        """Kill warm workers parked longer than ``ttl_s``; returns count."""
+        now = time.monotonic()
+        with self._cond:
+            doomed = [h for h in self._workers.values()
+                      if h.state == "warm" and now - h.warm_since >= ttl_s]
+            for h in doomed:
+                h.state = "dead"
+                del self._workers[h.worker_id]
+        for h in doomed:
+            self.pool.kill(h)
+        return len(doomed)
+
+    # ---------------------------------------------------------------- stats
+    def queue_depth(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    def num_workers(self, include_warm: bool = False) -> int:
+        with self._cond:
+            return sum(1 for h in self._workers.values()
+                       if h.state in ("idle", "busy")
+                       or (include_warm and h.state == "warm"))
+
+    def idle_workers(self) -> int:
+        with self._cond:
+            return sum(1 for h in self._workers.values() if h.state == "idle")
+
+    def inflight(self) -> int:
+        with self._cond:
+            return len(self._inflight)
+
+    def worker_pids(self) -> List[int]:
+        with self._cond:
+            return [h.pid for h in self._workers.values()
+                    if h.state != "dead"]
+
+    def observed_bandwidth(self) -> Optional[float]:
+        """EMA bytes/sec from ship round-trips; None before any sample."""
+        return self._bw_ema
+
+    def avg_task_seconds(self) -> Optional[float]:
+        return self._task_s_ema
+
+    # ------------------------------------------------------------- dispatch
+    def _dispatch_loop(self):
+        while True:
+            with self._cond:
+                task = worker = None
+                while not self._closed:
+                    idle = [h for h in self._workers.values()
+                            if h.state == "idle"]
+                    if self._queue and idle:
+                        for i, t in enumerate(self._queue):
+                            cands = [h for h in idle
+                                     if h.worker_id not in t.exclude]
+                            if cands:
+                                task, worker = t, cands[0]
+                                del self._queue[i]
+                                break
+                    if task is not None:
+                        break
+                    self._cond.wait(0.1)
+                if self._closed:
+                    return
+                worker.state = "busy"
+                worker.current = task
+                self._inflight[worker.worker_id] = task
+                task.attempts += 1
+            msg = {"op": task.kind, "task_id": task.task_id}
+            if task.kind == "ship":
+                msg["value"] = task.value
+            else:
+                msg["step"] = task.step
+                msg["fn"] = task.fn_bytes
+                msg["kwargs"] = task.kwargs
+            data = frame(msg)
+            # stamp BEFORE sending: a fast loopback reply may reach the
+            # reader thread while sendall is still returning
+            with self._cond:
+                task.bytes_sent = len(data)
+                self.bytes_sent += len(data)
+            task._send_t = time.perf_counter()
+            try:
+                worker.sock.sendall(data)
+            except OSError:
+                self._on_worker_death(worker)
+
+    # --------------------------------------------------------------- reader
+    def _reader_loop(self, h: WorkerHandle):
+        while True:
+            try:
+                msg, n = recv_msg(h.sock)
+            except (EOFError, OSError):
+                break
+            op = msg.get("op")
+            if op == "heartbeat":
+                h.last_heartbeat = time.monotonic()
+                continue
+            if op not in ("result", "error"):
+                continue
+            h.last_heartbeat = time.monotonic()
+            with self._cond:
+                task = self._inflight.pop(h.worker_id, None)
+                h.current = None
+                if h.state == "busy":
+                    h.state = "idle"
+                self.bytes_received += n
+                if task is not None:
+                    task.bytes_received = n
+                    task.seconds = time.perf_counter() - task._send_t
+                    task.worker_pid = h.pid
+                    if op == "result":
+                        self.tasks_done += 1
+                        if task.kind == "ship" and task.seconds > 0:
+                            bw = ((task.bytes_sent + n) / task.seconds)
+                            self._bw_ema = bw if self._bw_ema is None else \
+                                0.5 * bw + 0.5 * self._bw_ema
+                        elif task.kind == "task":
+                            s = task.seconds
+                            self._task_s_ema = s if self._task_s_ema is None \
+                                else 0.5 * s + 0.5 * self._task_s_ema
+                self._cond.notify_all()
+            if task is not None:
+                if op == "result":
+                    task.future.set_result(msg.get("value"))
+                else:
+                    task.future.set_exception(RemoteStepError(
+                        msg.get("traceback") or msg.get("error", "remote error")))
+        if not self._closed:
+            self._on_worker_death(h)
+
+    # ---------------------------------------------------------------- death
+    def _on_worker_death(self, h: WorkerHandle):
+        with self._cond:
+            if h.state == "dead" or h.worker_id not in self._workers:
+                return
+            h.state = "dead"
+            del self._workers[h.worker_id]
+            self.workers_lost += 1
+            task = self._inflight.pop(h.worker_id, None)
+            failed = None
+            if task is not None:
+                task.exclude.add(h.worker_id)
+                if task.attempts >= task.max_attempts:
+                    failed = task
+                else:
+                    self.tasks_requeued += 1
+                    self._queue.insert(0, task)
+            replace = self.replace_dead and not self._closed
+            self._cond.notify_all()
+        self.pool.kill(h)
+        if failed is not None:
+            failed.future.set_exception(WorkerLostError(
+                f"worker pid={h.pid} died running task {failed.task_id} "
+                f"(attempt {failed.attempts}/{failed.max_attempts})"))
+        if replace:
+            try:
+                self.add_worker()
+            except Exception:
+                pass   # pool closed mid-shutdown
+
+    # -------------------------------------------------------------- monitor
+    def _monitor_loop(self):
+        while not self._closed:
+            time.sleep(min(0.25, self.heartbeat_timeout_s / 4))
+            now = time.monotonic()
+            with self._cond:
+                handles = list(self._workers.values())
+            for h in handles:
+                if h.state == "dead":
+                    continue
+                if h.proc.poll() is not None or \
+                        now - h.last_heartbeat > self.heartbeat_timeout_s:
+                    self._on_worker_death(h)
+
+    # ------------------------------------------------------------- shutdown
+    def shutdown(self):
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            pending = list(self._queue) + list(self._inflight.values())
+            self._queue.clear()
+            self._inflight.clear()
+            handles = list(self._workers.values())
+            self._workers.clear()
+            self._cond.notify_all()
+        for t in pending:
+            if not t.future.done():
+                t.future.set_exception(FabricError("broker shut down"))
+        for h in handles:
+            try:
+                send_msg(h.sock, {"op": "shutdown"})
+            except OSError:
+                pass
+            self.pool.kill(h)
+        self.pool.close()

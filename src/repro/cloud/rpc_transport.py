@@ -1,0 +1,58 @@
+"""MDSS transport that ships bytes through the offload fabric.
+
+The seed's default ``Transport.transfer`` is a no-op — MDSS *accounted*
+movement that never happened. ``RPCTransport`` makes it real: when
+either endpoint tier is fabric-backed (``tier.worker_pool`` set), the
+value is wire-encoded, round-tripped through a worker process, and
+decoded — so ``ensure`` / ``stale_bytes`` accounting now reflects bytes
+that genuinely crossed an OS process boundary.
+
+Each ship also yields a bandwidth sample that is fed into
+``CostModel.observe_bandwidth``, replacing the static ``DCN_BW``
+constant in offload decisions with measured wire throughput (the
+scheduler's ``CostModelPolicy`` picks this up via
+``CostModel.transfer_time``).
+
+Known cost: for a step that is itself dispatched remotely, staging a
+stale input via ``ensure`` round-trips the value through a worker and
+the task dispatch ships it once more — the driver process remains the
+data plane. A worker-side URI cache (workers holding tier replicas so
+``ensure`` targets them directly) is the natural next step and would
+also make repeat offloads code-only over the wire.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.core.mdss import Transport
+
+
+class RPCTransport(Transport):
+    def __init__(self, fabric, tiers=None, cost_model=None,
+                 ship_timeout_s: float = 60.0):
+        super().__init__(tiers)
+        self.fabric = fabric
+        self.cost_model = cost_model
+        self.ship_timeout_s = ship_timeout_s
+        self.bytes_shipped: Dict[Tuple[str, str], int] = {}
+        self.ship_events: list = []
+
+    def _fabric_backed(self, name: str) -> bool:
+        tier = self.tiers.get(name)
+        return tier is not None and getattr(tier, "worker_pool", None) is not None
+
+    def transfer(self, value, src: str, dst: str):
+        if not (self._fabric_backed(src) or self._fabric_backed(dst)):
+            return super().transfer(value, src, dst)
+        task = self.fabric.ship(value, timeout=self.ship_timeout_s)
+        key = (src, dst)
+        self.bytes_shipped[key] = self.bytes_shipped.get(key, 0) \
+            + task.bytes_sent
+        self.ship_events.append((src, dst, task.bytes_sent, task.seconds))
+        if self.cost_model is not None and task.seconds > 0:
+            self.cost_model.observe_bandwidth(
+                src, dst, task.bytes_sent + task.bytes_received, task.seconds)
+        return task.value
+
+    def total_bytes_shipped(self) -> int:
+        return sum(self.bytes_shipped.values())

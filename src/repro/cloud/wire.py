@@ -1,0 +1,145 @@
+"""Pytree wire format + socket framing for the offload fabric.
+
+Workers must start fast, so this module imports only numpy + stdlib.
+A value is flattened by structural recursion (dict / list / tuple /
+namedtuple); array leaves — numpy arrays and anything array-protocol
+shaped such as ``jax.Array`` — are lifted out as raw contiguous byte
+buffers, and the remaining skeleton (containers, scalars, strings,
+``None``) is pickled. Frame layout:
+
+    !4s  magic  b"EMW1"
+    !Q   skeleton pickle length
+    !I   buffer count
+    skeleton pickle
+    per buffer: !Q length + raw bytes
+
+``send_msg`` / ``recv_msg`` add an outer ``!Q`` length prefix so one
+socket carries a stream of self-delimiting frames. Both return the
+framed byte count so every cross-process movement is accounted — these
+counts are what ``RPCTransport`` feeds back into the cost model as
+observed wire bandwidth.
+"""
+from __future__ import annotations
+
+import pickle
+import struct
+from dataclasses import dataclass
+from typing import Any, List, Tuple
+
+import numpy as np
+
+MAGIC = b"EMW1"
+_HEAD = struct.Struct("!4sQI")
+_LEN = struct.Struct("!Q")
+
+
+class WireError(ValueError):
+    pass
+
+
+@dataclass(frozen=True)
+class _Buf:
+    """Skeleton placeholder for an array leaf lifted into ``buffers``."""
+    idx: int
+    dtype: str
+    shape: Tuple[int, ...]
+
+
+def _is_foreign_array(obj) -> bool:
+    """Array-protocol object that is not numpy (e.g. jax.Array) — detected
+    without importing jax so workers never pay its import cost."""
+    return (not isinstance(obj, (np.ndarray, np.generic))
+            and hasattr(obj, "__array__")
+            and hasattr(obj, "dtype")
+            and hasattr(obj, "shape"))
+
+
+def _strip(obj, buffers: List[bytes]):
+    if isinstance(obj, np.ndarray) and obj.dtype != object:
+        a = np.ascontiguousarray(obj)
+        buffers.append(a.tobytes())
+        return _Buf(len(buffers) - 1, a.dtype.str, a.shape)
+    if _is_foreign_array(obj):
+        return _strip(np.asarray(obj), buffers)
+    if isinstance(obj, dict):
+        return {k: _strip(v, buffers) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        vals = [_strip(v, buffers) for v in obj]
+        return type(obj)(*vals) if hasattr(obj, "_fields") else tuple(vals)
+    if isinstance(obj, list):
+        return [_strip(v, buffers) for v in obj]
+    return obj
+
+
+def _fill(obj, buffers: List[bytes]):
+    if isinstance(obj, _Buf):
+        arr = np.frombuffer(buffers[obj.idx], dtype=np.dtype(obj.dtype))
+        return arr.reshape(obj.shape).copy()   # copy -> writable
+    if isinstance(obj, dict):
+        return {k: _fill(v, buffers) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        vals = [_fill(v, buffers) for v in obj]
+        return type(obj)(*vals) if hasattr(obj, "_fields") else tuple(vals)
+    if isinstance(obj, list):
+        return [_fill(v, buffers) for v in obj]
+    return obj
+
+
+def encode(value: Any) -> bytes:
+    buffers: List[bytes] = []
+    skeleton = _strip(value, buffers)
+    meta = pickle.dumps(skeleton, protocol=pickle.HIGHEST_PROTOCOL)
+    parts = [_HEAD.pack(MAGIC, len(meta), len(buffers)), meta]
+    for b in buffers:
+        parts.append(_LEN.pack(len(b)))
+        parts.append(b)
+    return b"".join(parts)
+
+
+def decode(data: bytes) -> Any:
+    if len(data) < _HEAD.size:
+        raise WireError(f"short frame: {len(data)} bytes")
+    magic, meta_len, nbuf = _HEAD.unpack_from(data, 0)
+    if magic != MAGIC:
+        raise WireError(f"bad magic {magic!r}")
+    off = _HEAD.size
+    skeleton = pickle.loads(data[off:off + meta_len])
+    off += meta_len
+    buffers: List[bytes] = []
+    for _ in range(nbuf):
+        (blen,) = _LEN.unpack_from(data, off)
+        off += _LEN.size
+        buffers.append(data[off:off + blen])
+        off += blen
+    return _fill(skeleton, buffers)
+
+
+# ------------------------------------------------------------------ sockets
+def _recvall(sock, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(min(n - len(buf), 1 << 20))
+        if not chunk:
+            raise EOFError("socket closed mid-frame")
+        buf += chunk
+    return bytes(buf)
+
+
+def frame(value: Any) -> bytes:
+    """Encode ``value`` with the outer length prefix, ready to sendall."""
+    data = encode(value)
+    return _LEN.pack(len(data)) + data
+
+
+def send_msg(sock, value: Any) -> int:
+    """Frame + send ``value``; returns total bytes put on the wire."""
+    data = frame(value)
+    sock.sendall(data)
+    return len(data)
+
+
+def recv_msg(sock) -> Tuple[Any, int]:
+    """Receive one frame; returns ``(value, total_bytes_read)``."""
+    (n,) = _LEN.unpack(_recvall(sock, _LEN.size))
+    data = _recvall(sock, n)
+    return decode(data), _LEN.size + n

@@ -1,0 +1,109 @@
+"""Fabric worker process: ``python -m repro.cloud.worker --connect ...``.
+
+Connects back to the broker, announces itself with a hello message, then
+serves tasks one at a time over the socket:
+
+  * ``task``  — resolve the step fn (registry name or pickled function),
+    execute with decoded kwargs, reply ``result`` or ``error``;
+  * ``ship``  — echo the payload back (the RPCTransport byte-movement
+    primitive: the value really crosses the process boundary both ways);
+  * ``shutdown`` — exit cleanly.
+
+A daemon thread emits heartbeats on an interval so the broker can tell a
+hung or SIGKILLed worker from a slow one. Imports are numpy + stdlib
+only; a pickled jax step would import jax lazily, but registry steps
+keep worker cold-start in the ~100 ms range.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import pickle
+import socket
+import threading
+import traceback
+
+from repro.cloud import tasklib
+from repro.cloud.wire import recv_msg, send_msg
+
+
+def serve(host: str, port: int, worker_id: str, init_modules, heartbeat_s: float):
+    for mod in init_modules:
+        if mod:
+            importlib.import_module(mod)
+    sock = socket.create_connection((host, port))
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    send_lock = threading.Lock()
+    with send_lock:
+        send_msg(sock, {"op": "hello", "worker_id": worker_id,
+                        "pid": os.getpid()})
+
+    stop = threading.Event()
+
+    def heartbeats():
+        while not stop.wait(heartbeat_s):
+            try:
+                with send_lock:
+                    send_msg(sock, {"op": "heartbeat", "worker_id": worker_id})
+            except OSError:
+                return
+
+    threading.Thread(target=heartbeats, daemon=True).start()
+
+    try:
+        while True:
+            try:
+                msg, _ = recv_msg(sock)
+            except (EOFError, OSError):
+                break
+            op = msg.get("op")
+            if op == "shutdown":
+                break
+            if op == "ship":
+                reply = {"op": "result", "task_id": msg["task_id"],
+                         "value": msg.get("value")}
+            elif op == "task":
+                reply = _run_task(msg)
+            else:
+                reply = {"op": "error", "task_id": msg.get("task_id", -1),
+                         "error": f"unknown op {op!r}"}
+            try:
+                with send_lock:
+                    send_msg(sock, reply)
+            except OSError:
+                break
+    finally:
+        stop.set()
+        sock.close()
+
+
+def _run_task(msg) -> dict:
+    task_id = msg["task_id"]
+    try:
+        if msg.get("step"):
+            fn = tasklib.resolve(msg["step"])
+        else:
+            fn = pickle.loads(msg["fn"])
+        out = fn(**(msg.get("kwargs") or {}))
+        return {"op": "result", "task_id": task_id, "value": out}
+    except BaseException as e:  # report everything short of os._exit
+        return {"op": "error", "task_id": task_id, "error": repr(e),
+                "traceback": traceback.format_exc()}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--connect", required=True, help="broker host:port")
+    ap.add_argument("--worker-id", required=True)
+    ap.add_argument("--init", default="repro.cloud.tasklib",
+                    help="comma-separated modules to import at startup")
+    ap.add_argument("--heartbeat", type=float, default=0.25)
+    args = ap.parse_args(argv)
+    host, port = args.connect.rsplit(":", 1)
+    serve(host, int(port), args.worker_id, args.init.split(","),
+          args.heartbeat)
+
+
+if __name__ == "__main__":
+    main()

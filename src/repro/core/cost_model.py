@@ -20,6 +20,11 @@ Step FLOP/byte statistics come from three sources, best-first:
   2. XLA ``cost_analysis`` captured when the migration manager compiles the
      step for a tier,
   3. developer hints on the Step (``flops_hint`` / ``bytes_hint``).
+
+Link bandwidth likewise prefers measurement over constants: the offload
+fabric's RPCTransport reports every real transfer via
+``observe_bandwidth`` and ``transfer_time`` uses that EMA when present,
+falling back to the tier's static link table otherwise.
 """
 from __future__ import annotations
 
@@ -45,9 +50,22 @@ class CostModel:
     def __init__(self, tiers: Dict[str, Tier]):
         self.tiers = tiers
         self.stats: Dict[str, StepStats] = {}
+        # observed wire bandwidth per (src, dst), EMA bytes/s — fed by the
+        # fabric's RPCTransport; overrides the static link constants
+        self.measured_bw: Dict[Tuple[str, str], float] = {}
 
     def stats_for(self, step_name: str) -> StepStats:
         return self.stats.setdefault(step_name, StepStats())
+
+    def observe_bandwidth(self, src: str, dst: str, nbytes: float,
+                          seconds: float, alpha: float = 0.5):
+        """Record a real transfer (``nbytes`` moved in ``seconds``)."""
+        if seconds <= 0 or nbytes <= 0:
+            return
+        bw = nbytes / seconds
+        prev = self.measured_bw.get((src, dst))
+        self.measured_bw[(src, dst)] = bw if prev is None else (
+            alpha * bw + (1 - alpha) * prev)
 
     # ------------------------------------------------------------- estimates
     def exec_time(self, step, tier_name: str) -> float:
@@ -65,7 +83,8 @@ class CostModel:
         if src == dst or nbytes == 0:
             return 0.0
         tier = self.tiers[src]
-        return tier.link_latency_s + nbytes / tier.bw_to(dst)
+        bw = self.measured_bw.get((src, dst)) or tier.bw_to(dst)
+        return tier.link_latency_s + nbytes / bw
 
     def offload_benefit(self, step, *, stale_in_bytes: float,
                         result_bytes: float, src: str = "local",

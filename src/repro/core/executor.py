@@ -179,7 +179,8 @@ class EmeraldExecutor:
                 self._emit("offload", s.name, rep.tier,
                            seconds=rep.seconds, bytes_in=rep.bytes_in,
                            bytes_out=rep.bytes_out, code_only=rep.code_only,
-                           attempt=attempt)
+                           attempt=attempt, remote=rep.remote,
+                           worker_pid=rep.worker_pid)
                 return rep
             except StepFailure as e:      # node failure -> retry / fallback
                 last_err = e

@@ -42,14 +42,18 @@ class OffloadReport:
     bytes_in: int
     bytes_out: int
     code_only: bool
+    remote: bool = False            # executed in a fabric worker process
+    worker_pid: int = 0             # pid of that worker (0 = in-process)
 
 
 class MigrationManager:
     def __init__(self, tiers: Dict[str, Tier], mdss: MDSS,
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None,
+                 remote_timeout_s: float = 120.0):
         self.tiers = tiers
         self.mdss = mdss
         self.cost_model = cost_model or CostModel(tiers)
+        self.remote_timeout_s = remote_timeout_s
         self._compile_cache: Dict[Tuple[str, str], Any] = {}
         self.reports: list[OffloadReport] = []
 
@@ -59,8 +63,19 @@ class MigrationManager:
         if key in self._compile_cache:
             return self._compile_cache[key]
         fn = step.fn
-        if step.jax_step:
-            fn = jax.jit(step.fn)
+        registry_fn = False
+        if fn is None and step.remote_impl:
+            # registry-only step: resolve the same fn the workers run so
+            # the local tier remains a valid fallback
+            from repro.cloud import tasklib
+            fn = tasklib.resolve(step.remote_impl)
+            registry_fn = True
+        if fn is None:
+            raise StepFailure(f"step {step.name} has no fn or remote_impl")
+        if step.jax_step and not registry_fn:
+            # registry fns are numpy-land by contract — never jit them,
+            # whatever jax_step defaults to
+            fn = jax.jit(fn)
         self._compile_cache[key] = fn
         return fn
 
@@ -78,20 +93,37 @@ class MigrationManager:
 
     # -------------------------------------------------------------- execute
     def execute(self, step: Step, tier_name: str) -> OffloadReport:
-        """Run ``step`` on ``tier_name``; inputs/outputs through MDSS."""
+        """Run ``step`` on ``tier_name``; inputs/outputs through MDSS.
+
+        When the tier is fabric-backed (``tier.worker_pool``) and the step
+        is fabric-runnable (registry name or picklable plain fn), execution
+        happens in a worker OS process and the report carries the real
+        bytes that crossed the wire; otherwise it runs in-process exactly
+        as the seed did (jax steps always do — their point is mesh-placed
+        execution, not process separation).
+        """
         tier = self.tiers[tier_name]
         uris = list(step.inputs)
         stale = self.mdss.stale_bytes(uris, tier_name)
-        bytes_in = self.mdss.ensure(uris, tier_name)
-        kwargs = {u: self.mdss.get(u, tier_name) for u in uris}
-        fn = self._executable(step, tier_name)
-        self._capture_cost(step, fn, kwargs)
-        t0 = time.perf_counter()
-        ctx = tier.mesh if tier.mesh is not None else _nullcontext()
-        with ctx:
-            out = fn(**kwargs)
-        out = jax.block_until_ready(out) if step.jax_step else out
-        dt = time.perf_counter() - t0
+        bytes_in, kwargs = self._stage_inputs(step, tier_name, uris)
+        fabric = getattr(tier, "worker_pool", None)
+        if fabric is not None and fabric.can_run(step):
+            out, dt, wire_in, wire_out, pid = self._execute_remote(
+                step, fabric, kwargs)
+            # report the worker's actual wire ingress; the MDSS staging
+            # bytes remain visible in mdss.bytes_moved
+            bytes_in = wire_in
+            remote, worker_pid, wire_bytes_out = True, pid, wire_out
+        else:
+            fn = self._executable(step, tier_name)
+            self._capture_cost(step, fn, kwargs)
+            t0 = time.perf_counter()
+            ctx = tier.mesh if tier.mesh is not None else _nullcontext()
+            with ctx:
+                out = fn(**kwargs)
+            out = jax.block_until_ready(out) if step.jax_step else out
+            dt = time.perf_counter() - t0
+            remote, worker_pid, wire_bytes_out = False, 0, 0
         if not isinstance(out, dict):
             if len(step.outputs) != 1:
                 raise StepFailure(
@@ -104,11 +136,46 @@ class MigrationManager:
         for k in step.outputs:
             self.mdss.put(k, out[k], tier=tier_name)
             bytes_out += nbytes_of(out[k])
+        if remote:
+            bytes_out = wire_bytes_out
         self.cost_model.stats_for(step.name).observe(tier_name, dt)
         rep = OffloadReport(step.name, tier_name, dt, bytes_in, bytes_out,
-                            code_only=(stale == 0 and bool(uris)))
+                            code_only=(stale == 0 and bool(uris)),
+                            remote=remote, worker_pid=worker_pid)
         self.reports.append(rep)
         return rep
+
+    def _stage_inputs(self, step: Step, tier_name: str, uris):
+        """MDSS ensure + get with fabric faults (a worker dying while the
+        transport ships a stale input) mapped to StepFailure, so staging
+        errors go through the executor's retry path like execution errors."""
+        from concurrent.futures import TimeoutError as _FutTimeout
+        try:
+            bytes_in = self.mdss.ensure(uris, tier_name)
+            return bytes_in, {u: self.mdss.get(u, tier_name) for u in uris}
+        except StepFailure:
+            raise
+        except (RuntimeError, _FutTimeout, TimeoutError) as e:
+            raise StepFailure(
+                f"step {step.name}: staging inputs on {tier_name} failed: "
+                f"{e}") from e
+
+    def _execute_remote(self, step: Step, fabric, kwargs):
+        """Dispatch through the fabric broker; fabric faults surface as
+        StepFailure so the executor's retry / tier-fallback logic applies."""
+        from concurrent.futures import TimeoutError as _FutTimeout
+        from repro.cloud.broker import FabricError
+        try:
+            task = fabric.submit_step(step, kwargs)
+            out = task.result(self.remote_timeout_s)
+        except FabricError as e:
+            raise StepFailure(f"fabric: {e}") from e
+        except (TimeoutError, _FutTimeout) as e:
+            raise StepFailure(
+                f"step {step.name} timed out after {self.remote_timeout_s}s "
+                "on the fabric") from e
+        return (out, task.seconds, task.bytes_sent, task.bytes_received,
+                task.worker_pid)
 
 
 class _nullcontext:

@@ -11,6 +11,12 @@ runtime:
     model predicts net benefit, accounting for MDSS-stale input bytes
     (so a step whose data is already cloud-resident offloads more eagerly
     — the scheduler and MDSS reinforce each other).
+
+Transfer-time estimates use *observed* wire bandwidth when the offload
+fabric is attached: every RPCTransport ship feeds
+``CostModel.observe_bandwidth`` and ``CostModel.transfer_time`` prefers
+that EMA over the static ``DCN_BW`` link constant, so offload decisions
+track what the wire actually delivers.
 """
 from __future__ import annotations
 
@@ -47,10 +53,22 @@ class CostModelPolicy:
     def should_offload(self, step: Step) -> bool:
         if not step.remotable:
             return False
+        return self.explain(step)["benefit_s"] > 0.0
+
+    def explain(self, step: Step) -> dict:
+        """Decision breakdown — which bandwidth the model used and why."""
         stale = self.mdss.stale_bytes(step.inputs, self.cloud_tier)
-        return self.cost_model.should_offload(
+        benefit = self.cost_model.offload_benefit(
             step, stale_in_bytes=stale, result_bytes=step.bytes_hint or 0,
             src="local", dst=self.cloud_tier)
+        return {
+            "stale_in_bytes": stale,
+            "benefit_s": benefit,
+            "bw_bytes_per_s": self.cost_model.measured_bw.get(
+                ("local", self.cloud_tier)),
+            "bw_source": "observed" if ("local", self.cloud_tier)
+                         in self.cost_model.measured_bw else "static",
+        }
 
 
 def make_policy(name: str, cost_model: CostModel, mdss: MDSS,

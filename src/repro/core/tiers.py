@@ -35,6 +35,9 @@ class Tier:
     mesh: Optional["jax.sharding.Mesh"] = None
     link_bw: Dict[str, float] = field(default_factory=dict)  # to other tiers
     link_latency_s: float = 1e-3
+    # offload-fabric backing (repro.cloud.Fabric); when set, remotable
+    # registry/picklable steps targeting this tier run in worker processes
+    worker_pool: Optional[object] = None
 
     @property
     def peak_flops(self) -> float:

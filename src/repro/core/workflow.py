@@ -40,6 +40,7 @@ class Step:
     flops_hint: float = 0.0                    # cost-model hints
     bytes_hint: float = 0.0
     retries: int = 2                           # fault-tolerance budget
+    remote_impl: Optional[str] = None          # fabric step-registry name
 
     def scope(self, wf: "Workflow") -> Tuple[str, ...]:
         """Path of enclosing steps."""

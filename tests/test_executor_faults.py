@@ -1,0 +1,120 @@
+"""Deterministic fault injection through the executor's recovery paths.
+
+Covers the exact Event streams (not just counts) for: a step fn that
+fails N times then succeeds, retry-with-tier-fallback, a fabric worker
+hard-killed mid-task with in-process local fallback, and straggler
+speculation."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, EmeraldExecutor, MDSS, MigrationManager,
+                        StepFailure, Workflow, default_tiers, partition)
+
+
+def emerald():
+    tiers = default_tiers()
+    cm = CostModel(tiers)
+    mdss = MDSS(tiers, cost_model=cm)
+    return MigrationManager(tiers, mdss, cm)
+
+
+def event_kinds(ex, step):
+    return [(e.kind, e.tier) for e in ex.events
+            if e.step == step and e.kind in ("suspend", "retry", "offload",
+                                             "speculate", "resume")]
+
+
+def test_fails_n_times_then_succeeds_event_stream():
+    state = {"fails": 2}
+
+    def flaky(x):
+        if state["fails"] > 0:
+            state["fails"] -= 1
+            raise StepFailure("injected: transient node fault")
+        return {"y": np.float64(x) + 1}
+
+    wf = Workflow("flaky")
+    wf.var("x")
+    wf.step("s", flaky, inputs=("x",), outputs=("y",), remotable=True,
+            jax_step=False, retries=3)
+    ex = EmeraldExecutor(partition(wf), emerald())
+    out = ex.run({"x": 41.0})
+    assert float(out["y"]) == 42.0
+    # exactly: suspend, two failed cloud placements, success still on cloud
+    assert event_kinds(ex, "s") == [
+        ("suspend", ""), ("retry", "cloud"), ("retry", "cloud"),
+        ("offload", "cloud"), ("resume", "")]
+
+
+def test_retry_with_tier_fallback_event_stream():
+    calls = {"n": 0}
+
+    def cloud_only_fails(x):
+        calls["n"] += 1
+        if calls["n"] == 1:                 # the single cloud attempt
+            raise StepFailure("injected: cloud node lost")
+        return {"y": np.float64(x) * 10}
+
+    wf = Workflow("fallback")
+    wf.var("x")
+    wf.step("s", cloud_only_fails, inputs=("x",), outputs=("y",),
+            remotable=True, jax_step=False, retries=1)
+    ex = EmeraldExecutor(partition(wf), emerald())
+    out = ex.run({"x": 3.0})
+    assert float(out["y"]) == 30.0
+    assert event_kinds(ex, "s") == [
+        ("suspend", ""), ("retry", "cloud"), ("offload", "local"),
+        ("resume", "")]
+    offload = [e for e in ex.events if e.kind == "offload"][0]
+    assert offload.info["remote"] is False   # fallback ran in-process
+
+
+def test_worker_killed_mid_task_falls_back_to_local():
+    """A fabric worker is hard-killed (os._exit) while running the step;
+    with no requeue budget the executor's tier fallback must finish the
+    workflow in-process."""
+    Fabric = pytest.importorskip("repro.cloud").Fabric
+    tiers = default_tiers()
+    cm = CostModel(tiers)
+    mdss = MDSS(tiers, cost_model=cm)
+    with Fabric(workers=1, max_attempts=1, replace_dead=False) as fabric:
+        tiers["cloud"].worker_pool = fabric
+        mgr = MigrationManager(tiers, mdss, cm)
+        wf = Workflow("killed")
+        wf.var("x")
+        # crash_in_worker dies inside a worker, succeeds in-process
+        wf.step("s", None, inputs=("x",), outputs=("y",), remotable=True,
+                jax_step=False, retries=1, remote_impl="crash_in_worker")
+        ex = EmeraldExecutor(partition(wf), mgr)
+        out = ex.run({"x": np.float64(7.0)})
+        assert float(out["y"]) == 70.0
+        assert fabric.broker.workers_lost >= 1
+    assert event_kinds(ex, "s") == [
+        ("suspend", ""), ("retry", "cloud"), ("offload", "local"),
+        ("resume", "")]
+
+
+def test_straggler_speculation_event_stream():
+    state = {"calls": 0}
+
+    def sometimes_slow(x):
+        state["calls"] += 1
+        if state["calls"] == 2:
+            time.sleep(1.0)
+        return {"y": np.float64(x) + 1}
+
+    wf = Workflow("strag")
+    wf.var("x")
+    wf.step("s", sometimes_slow, inputs=("x",), outputs=("y",),
+            remotable=True, jax_step=False)
+    ex = EmeraldExecutor(partition(wf), emerald(), speculate_after=2.0)
+    ex.run({"x": 0.0})                       # seeds the runtime EMA
+    ex.events.clear()
+    out = ex.run({"x": 5.0})
+    assert float(out["y"]) == 6.0
+    kinds = event_kinds(ex, "s")
+    assert kinds[0] == ("suspend", "")
+    assert ("speculate", "cloud2") in kinds
+    assert kinds[-1] == ("resume", "")

@@ -2,6 +2,8 @@
 plus hypothesis property tests against a shadow model."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import CostModel, MDSS, default_tiers

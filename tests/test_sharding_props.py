@@ -1,4 +1,7 @@
 """Property-based tests for sharding resolution invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 

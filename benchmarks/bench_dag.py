@@ -1,0 +1,155 @@
+"""Wide heterogeneous DAG: event-driven executor vs the wave barrier.
+
+The workload is the shape Emerald's Fig 9b speedup actually depends on:
+``width`` independent offloadable sources with a 10:1 runtime spread, the
+fast sources each feeding a short chain of follow-up steps, everything
+joining in one reduce. A wave-barrier scheduler (the pre-event-driven
+``EmeraldExecutor._run``: submit the ready frontier, block on the whole
+wave, recompute readiness) serialises every chain level behind the slowest
+source; completion-triggered scheduling runs the fast chains *while the
+long pole is still executing*, so its makespan approaches the critical
+path ``slow_source + reduce``.
+
+Reported: wave makespan, event makespan, speedup, and the makespan's gap
+to the analytic critical-path lower bound (the smoke gate asserts on it).
+"""
+from __future__ import annotations
+
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import (CostModel, EmeraldExecutor, MDSS, MigrationManager,
+                        Workflow, default_tiers, partition)
+
+SMOKE = bool(os.environ.get("DAG_SMOKE"))
+
+
+def _sleeper(name: str, seconds: float):
+    def fn(**kw):
+        time.sleep(seconds)
+        return {f"y_{name}": np.float64(seconds)}
+    return fn
+
+
+def _branch_shape(width: int, spread: float, base_s: float):
+    """Per-branch (source duration, chain depth, mid duration).
+
+    Chains are depth-balanced: each fast source gets as many follow-up
+    steps as fit under the slowest source's runtime, so the analytic
+    critical path stays ``slow_source + reduce`` while a wave barrier
+    still pays ``slow_source + max_chain * mid + reduce``.
+    """
+    slow = base_s * spread
+    mid_s = base_s * 2
+    shape = []
+    for i in range(width):
+        frac = i / max(1, width - 1)
+        dur = base_s * (1 + (spread - 1) * frac)   # i = width-1 is the pole
+        chain = int((slow - dur) / mid_s)
+        shape.append((dur, chain, mid_s))
+    return shape
+
+
+def make_wide_wf(width: int = 8, spread: float = 10.0,
+                 base_s: float = 0.05) -> Workflow:
+    """``width`` sources with a ``spread``:1 runtime spread, fast sources
+    feeding depth-balanced chains, one reduce joining all tails."""
+    wf = Workflow("wide_dag")
+    wf.var("x")
+    tails = []
+    for i, (dur, chain, mid_s) in enumerate(
+            _branch_shape(width, spread, base_s)):
+        wf.step(f"src{i}", _sleeper(f"src{i}", dur), inputs=("x",),
+                outputs=(f"y_src{i}",), remotable=True, jax_step=False)
+        tail = f"y_src{i}"
+        for c in range(chain):
+            nm = f"mid{i}_{c}"
+            wf.step(nm, _sleeper(nm, mid_s), inputs=(tail,),
+                    outputs=(f"y_{nm}",), remotable=True, jax_step=False)
+            tail = f"y_{nm}"
+        tails.append(tail)
+    wf.step("reduce", _sleeper("reduce", base_s), inputs=tuple(tails),
+            outputs=("y_reduce",), remotable=True, jax_step=False)
+    return wf
+
+
+def critical_path_bound(width: int = 8, spread: float = 10.0,
+                        base_s: float = 0.05) -> float:
+    """Analytic longest path: max over branches of source + chain, plus
+    the reduce."""
+    longest = max(dur + chain * mid_s
+                  for dur, chain, mid_s in _branch_shape(width, spread,
+                                                         base_s))
+    return longest + base_s
+
+
+def _emerald():
+    tiers = default_tiers()
+    cm = CostModel(tiers)
+    mdss = MDSS(tiers, cost_model=cm)
+    return MigrationManager(tiers, mdss, cm)
+
+
+def run_event(wf: Workflow, workers: int = 16) -> float:
+    ex = EmeraldExecutor(partition(wf), _emerald(), max_workers=workers)
+    t0 = time.perf_counter()
+    ex.run({"x": np.float64(0.0)})
+    dt = time.perf_counter() - t0
+    # Property 3 must survive the event-driven rewrite: per step, strict
+    # suspend -> offload -> resume alternation
+    for s in wf.toplevel():
+        kinds = [e.kind for e in ex.events
+                 if e.step == s.name and e.kind in ("suspend", "offload",
+                                                    "resume")]
+        assert kinds == ["suspend", "offload", "resume"], (s.name, kinds)
+    return dt
+
+
+def run_waves(wf: Workflow, workers: int = 16) -> float:
+    """Reference wave-barrier scheduler (the seed executor's loop): submit
+    the ready frontier, block on *every* member, only then recompute
+    readiness."""
+    mgr = _emerald()
+    mgr.mdss.put("x", np.float64(0.0), tier="local")
+    deps = wf.dependencies()
+    steps = {s.name: s for s in wf.toplevel()}
+    completed: set = set()
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=workers) as pool:
+        while len(completed) < len(steps):
+            ready = [steps[n] for n in wf.order
+                     if n in steps and n not in completed
+                     and deps[n] <= completed]
+            futs = {pool.submit(mgr.execute, s, "cloud"): s for s in ready}
+            for f, s in futs.items():
+                f.result()
+                completed.add(s.name)          # <- the barrier
+    return time.perf_counter() - t0
+
+
+def main() -> List[str]:
+    cfg: Dict[str, float] = (
+        dict(width=4, spread=10.0, base_s=0.02) if SMOKE else
+        dict(width=8, spread=10.0, base_s=0.05))
+    wf_ev = make_wide_wf(**cfg)
+    wf_wv = make_wide_wf(**cfg)
+    bound = critical_path_bound(**cfg)
+    t_wave = run_waves(wf_wv)
+    t_event = run_event(wf_ev)
+    rows = [
+        row(f"dag_wave_w{cfg['width']}", t_wave, ""),
+        row(f"dag_event_w{cfg['width']}", t_event,
+            f"speedup={t_wave / t_event:.2f}x"),
+        row("dag_critical_path_bound", bound,
+            f"event_gap={(t_event / bound - 1) * 100:.0f}%"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -7,6 +7,9 @@
   bench_lm_workflow      beyond-paper    (LM train/serve through Emerald)
   bench_fabric           beyond-paper    (offload fabric: wire format,
                                           ship bandwidth, worker scaling)
+  bench_dag              beyond-paper    (event-driven executor vs wave
+                                          barrier on a wide heterogeneous
+                                          DAG; critical-path gap)
 
 Prints ``name,us_per_call,derived`` CSV. Roofline numbers come from the
 dry-run (see launch/dryrun.py), not from here — this container's CPU wall
@@ -19,12 +22,13 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (bench_at, bench_fabric, bench_lm_workflow,
-                            bench_mdss, bench_parallel_offload,
-                            bench_partitioner)
+    from benchmarks import (bench_at, bench_dag, bench_fabric,
+                            bench_lm_workflow, bench_mdss,
+                            bench_parallel_offload, bench_partitioner)
     modules = [
         ("bench_mdss", bench_mdss),
         ("bench_parallel_offload", bench_parallel_offload),
+        ("bench_dag", bench_dag),
         ("bench_partitioner", bench_partitioner),
         ("bench_fabric", bench_fabric),
         ("bench_at", bench_at),

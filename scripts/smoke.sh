@@ -32,4 +32,27 @@ with Fabric(workers=2) as fabric:
 print("\n".join(rows))
 print(f"# fabric smoke ok in {time.time() - t0:.1f}s")
 EOF
+
+echo "== dag smoke (event-driven executor vs critical-path bound) =="
+DAG_SMOKE=1 timeout 120 python - <<'EOF'
+import time
+from benchmarks import bench_dag
+
+t0 = time.time()
+cfg = dict(width=4, spread=10.0, base_s=0.02)
+bound = bench_dag.critical_path_bound(**cfg)
+makespan = bench_dag.run_event(bench_dag.make_wide_wf(**cfg))
+gap = makespan / bound - 1
+print(f"bench_dag: makespan={makespan * 1e3:.0f}ms "
+      f"bound={bound * 1e3:.0f}ms gap={gap * 100:.0f}%")
+# regression gate: the event-driven executor must stay near the analytic
+# critical-path lower bound (typically <10% over; a wave barrier sits
+# ~70% above it). 35% absorbs sleep-oversleep jitter on loaded CI boxes
+# at this config's small absolute sleeps while still catching any
+# barrier-shaped regression.
+assert gap <= 0.35, (
+    f"makespan regression: {makespan:.3f}s is {gap * 100:.0f}% over the "
+    f"critical-path bound {bound:.3f}s")
+print(f"# dag smoke ok in {time.time() - t0:.1f}s")
+EOF
 echo "smoke OK"

@@ -66,6 +66,19 @@ class Task:
     def result(self, timeout: Optional[float] = None):
         return self.future.result(timeout)
 
+    # non-blocking harvest for completion-queue consumers (benchmark
+    # drivers, autoscaler probes, bulk submitters): poll or subscribe
+    # instead of parking a thread per task. The executor's offload lanes
+    # deliberately stay blocking — each lane owns one step's retry /
+    # speculation lifecycle end to end.
+    def done(self) -> bool:
+        return self.future.done()
+
+    def add_done_callback(self, fn):
+        """``fn(task)`` runs as soon as the task resolves (result OR
+        error), on the broker's reader thread — keep it short."""
+        self.future.add_done_callback(lambda _f: fn(self))
+
 
 class Broker:
     def __init__(self, pool: WorkerPool, *, max_attempts: int = 3,
@@ -200,6 +213,14 @@ class Broker:
         with self._cond:
             return [h.pid for h in self._workers.values()
                     if h.state != "dead"]
+
+    def harvest(self, tasks) -> tuple:
+        """Non-blocking completion sweep: partition ``tasks`` into
+        (finished, pending) without waiting on any of them."""
+        finished, pending = [], []
+        for t in tasks:
+            (finished if t.done() else pending).append(t)
+        return finished, pending
 
     def observed_bandwidth(self) -> Optional[float]:
         """EMA bytes/sec from ship round-trips; None before any sample."""

@@ -22,6 +22,7 @@ also make repeat offloads code-only over the wire.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, Optional, Tuple
 
 from repro.core.mdss import Transport
@@ -34,6 +35,9 @@ class RPCTransport(Transport):
         self.fabric = fabric
         self.cost_model = cost_model
         self.ship_timeout_s = ship_timeout_s
+        # MDSS calls transfer() with no lock held (transfers overlap
+        # compute), so the accounting needs its own
+        self._lock = threading.Lock()
         self.bytes_shipped: Dict[Tuple[str, str], int] = {}
         self.ship_events: list = []
 
@@ -46,13 +50,16 @@ class RPCTransport(Transport):
             return super().transfer(value, src, dst)
         task = self.fabric.ship(value, timeout=self.ship_timeout_s)
         key = (src, dst)
-        self.bytes_shipped[key] = self.bytes_shipped.get(key, 0) \
-            + task.bytes_sent
-        self.ship_events.append((src, dst, task.bytes_sent, task.seconds))
-        if self.cost_model is not None and task.seconds > 0:
-            self.cost_model.observe_bandwidth(
-                src, dst, task.bytes_sent + task.bytes_received, task.seconds)
+        with self._lock:
+            self.bytes_shipped[key] = self.bytes_shipped.get(key, 0) \
+                + task.bytes_sent
+            self.ship_events.append((src, dst, task.bytes_sent, task.seconds))
+            if self.cost_model is not None and task.seconds > 0:
+                self.cost_model.observe_bandwidth(
+                    src, dst, task.bytes_sent + task.bytes_received,
+                    task.seconds)
         return task.value
 
     def total_bytes_shipped(self) -> int:
-        return sum(self.bytes_shipped.values())
+        with self._lock:
+            return sum(self.bytes_shipped.values())

@@ -7,5 +7,6 @@ from repro.core.migration import MigrationManager, StepFailure  # noqa: F401
 from repro.core.executor import EmeraldExecutor, WorkflowFailure  # noqa: F401
 from repro.core.cost_model import CostModel, StepStats  # noqa: F401
 from repro.core.scheduler import (AnnotatePolicy, CostModelPolicy,  # noqa: F401
-                                  NeverPolicy, make_policy)
+                                  NeverPolicy, critical_path_lengths,
+                                  make_policy)
 from repro.core.tiers import Tier, default_tiers  # noqa: F401

@@ -8,6 +8,16 @@ URI-keyed, versioned, multi-tier data store:
   * ``ensure(uri, tier)`` is the offload fast-path: if the target tier
     already holds the latest version nothing moves (task-code-only
     offloading); otherwise only the stale entries transfer,
+  * ``prefetch(uris, tier)`` is the pipelined variant: the same ensure on
+    a background thread, so the transfer overlaps upstream compute — the
+    executor issues it for a dispatched step's likely successors,
+  * transfers run **outside** the store lock and install under a version
+    guard (hazard check): a copy shipped for version *v* never overwrites
+    a copy of a newer version, and a write that lands mid-transfer simply
+    re-ships — concurrent readers/writers never block on the wire,
+  * ``put(..., expect_version=)`` is a write fence: the put is refused
+    (returns ``None``) when the entry has moved past the expected
+    version — how a speculation loser is kept from clobbering newer data,
   * every cross-tier movement is accounted (bytes, modeled seconds) — the
     MDSS benchmark and the §Perf analysis read these counters.
 
@@ -19,6 +29,7 @@ from __future__ import annotations
 
 import threading
 import time
+from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -66,24 +77,78 @@ class MDSS:
         self.cost_model = cost_model
         self._entries: Dict[str, _Entry] = {}
         self._lock = threading.RLock()
+        # one wire flight per (uri, tier): racing ensures wait, not re-ship
+        self._inflight: Dict[Tuple[str, str], threading.Event] = {}
+        # best-effort prefetch backpressure: beyond this many concurrent
+        # prefetch threads, new requests are dropped (ensure still staged
+        # synchronously at execution time, so only overlap is lost)
+        self._prefetch_slots = threading.BoundedSemaphore(4)
         # accounting
         self.bytes_moved: Dict[Tuple[str, str], int] = {}
         self.modeled_seconds: float = 0.0
         self.sync_events: list = []
+        self.prefetch_ops: int = 0
+        self.prefetch_bytes: int = 0
+        self.fenced_puts: int = 0
 
     # ------------------------------------------------------------------ api
-    def put(self, uri: str, value, tier: str = "local"):
-        """New version written on ``tier`` (local-first semantics)."""
+    def put(self, uri: str, value, tier: str = "local",
+            expect_version: Optional[int] = None):
+        """New version written on ``tier`` (local-first semantics).
+
+        With ``expect_version`` the put is a fenced write: it succeeds only
+        if the entry is still at that version (compare-and-bump under the
+        store lock). A stale writer — e.g. a speculation loser finishing
+        after the winner already published — gets ``None`` back and the
+        entry is untouched.
+        """
         with self._lock:
             e = self._entries.setdefault(uri, _Entry())
+            if expect_version is not None and e.version != expect_version:
+                self.fenced_puts += 1
+                return None
             e.version += 1
             e.writer = tier
             e.copies[tier] = (e.version, value)
             return e.version
 
+    def put_many(self, values: Dict[str, Any], tier: str = "local",
+                 expect_versions: Optional[Dict[str, int]] = None):
+        """Atomically publish several URIs (one lock hold).
+
+        With ``expect_versions`` the whole batch is fenced **all-or-
+        nothing**: if any entry moved past its expected version, nothing
+        is written and ``None`` is returned — two speculation twins can
+        never interleave a mixed set of a step's outputs.
+        """
+        with self._lock:
+            if expect_versions is not None:
+                for uri in values:
+                    e = self._entries.get(uri)
+                    if e is not None and e.version != expect_versions.get(
+                            uri, 0):
+                        self.fenced_puts += 1
+                        return None
+            return {uri: self.put(uri, val, tier)
+                    for uri, val in values.items()}
+
     def version(self, uri: str) -> int:
         e = self._entries.get(uri)
         return 0 if e is None else e.version
+
+    def peek_latest(self, uri: str):
+        """(value, version) of the freshest replica, wherever it lives —
+        a lock-held reference read, no transfer, no accounting. For
+        observers (checkpointing) that need a consistent snapshot without
+        paying or modeling data movement."""
+        with self._lock:
+            e = self._entries.get(uri)
+            if e is None:
+                return None, 0
+            src = self._freshest_tier(e)
+            if src is None:
+                return None, 0
+            return e.copies[src][1], e.version
 
     def has_latest(self, uri: str, tier: str) -> bool:
         with self._lock:
@@ -116,36 +181,113 @@ class MDSS:
             return e.copies[tier][1]
 
     def ensure(self, uris, tier: str) -> int:
-        """Make ``tier`` current for ``uris``; returns bytes moved."""
+        """Make ``tier`` current for ``uris``; returns bytes moved.
+
+        The transport call happens **outside** the store lock so a slow
+        transfer never serialises unrelated puts/gets (or a concurrent
+        prefetch). Installation is hazard-checked: the shipped copy is
+        tagged with the version snapshotted before the transfer and never
+        replaces a newer copy; if a writer bumped the entry mid-flight the
+        loop re-ships the fresher version.
+        """
+        return sum(self._ensure_one(uri, tier) for uri in uris)
+
+    def _ensure_one(self, uri: str, tier: str) -> int:
         moved = 0
-        with self._lock:
-            for uri in uris:
+        while True:
+            peer = None
+            with self._lock:
                 e = self._entries.get(uri)
                 if e is None:
                     raise KeyError(uri)
                 if self.has_latest(uri, tier):
-                    continue
-                src = self._freshest_tier(e)
-                if src is None:
-                    raise KeyError(f"{uri}: no replica anywhere")
-                value = e.copies[src][1]
-                value = self.transport.transfer(value, src, tier)
-                n = nbytes_of(value)
-                moved += n
-                self._account(src, tier, n)
-                e.copies[tier] = (e.version, value)
-                self.sync_events.append((uri, src, tier, n))
-        return moved
+                    return moved
+                peer = self._inflight.get((uri, tier))
+                if peer is None:
+                    src = self._freshest_tier(e)
+                    if src is None:
+                        raise KeyError(f"{uri}: no replica anywhere")
+                    snap_version = e.version
+                    value = e.copies[src][1]
+                    flight = threading.Event()
+                    self._inflight[(uri, tier)] = flight
+            if peer is not None:
+                # someone (e.g. a prefetch) is already shipping this copy:
+                # wait for that flight instead of moving the bytes twice
+                peer.wait(timeout=300.0)
+                continue
+            try:
+                # wire movement with no lock held
+                shipped = self.transport.transfer(value, src, tier)
+                n = nbytes_of(shipped)
+                with self._lock:
+                    e = self._entries.get(uri)
+                    if e is None:
+                        raise KeyError(uri)
+                    cur = e.copies.get(tier)
+                    if cur is None or cur[0] < snap_version:
+                        e.copies[tier] = (snap_version, shipped)
+                        moved += n
+                        self._account(src, tier, n)
+                        self.sync_events.append((uri, src, tier, n))
+                    if self.has_latest(uri, tier):
+                        return moved
+            finally:
+                with self._lock:
+                    self._inflight.pop((uri, tier), None)
+                flight.set()
+            # version moved mid-transfer -> loop and ship the newer one
+
+    # -------------------------------------------------------------- prefetch
+    def prefetch(self, uris, tier: str) -> Optional[Future]:
+        """Asynchronous :meth:`ensure` — transfer overlaps caller compute.
+
+        Missing URIs (outputs of steps still in flight) are skipped, not
+        errors: prefetch is a best-effort warm-up, correctness still rests
+        on the synchronous ``ensure`` at execution time. Returns a future
+        resolving to the bytes moved, or ``None`` when the request was
+        dropped at the concurrency cap (stale prefetches are worthless, so
+        past the cap requests are shed, not queued). Each admitted
+        prefetch runs on its own short-lived daemon thread — nothing to
+        shut down, nothing leaked.
+        """
+        uris = list(uris)
+        if not self._prefetch_slots.acquire(blocking=False):
+            return None
+        fut: Future = Future()
+        threading.Thread(target=self._prefetch_task, args=(uris, tier, fut),
+                         daemon=True, name="mdss-prefetch").start()
+        return fut
+
+    def _prefetch_task(self, uris, tier: str, fut: Future):
+        try:
+            moved = 0
+            for uri in uris:
+                try:
+                    moved += self._ensure_one(uri, tier)
+                except Exception:
+                    # best-effort by contract: a missing uri or transport
+                    # hiccup must neither kill the rest of the batch nor
+                    # surface on a future nobody retrieves — the one
+                    # ensure that matters runs synchronously at staging
+                    pass
+            with self._lock:
+                self.prefetch_ops += 1
+                self.prefetch_bytes += moved
+            fut.set_result(moved)
+        finally:
+            self._prefetch_slots.release()
 
     def synchronize(self, uri: Optional[str] = None, tiers=None):
         """Paper's ``synchronize``: reconcile replicas last-writer-wins."""
         with self._lock:
             uris = [uri] if uri else list(self._entries)
             tiers = tiers or list(self.tiers)
-            for u in uris:
-                for t in tiers:
-                    if t in self._entries[u].copies or t == self._entries[u].writer:
-                        self.ensure([u], t)
+            pairs = [(u, t) for u in uris for t in tiers
+                     if t in self._entries[u].copies
+                     or t == self._entries[u].writer]
+        for u, t in pairs:       # transfers outside the lock
+            self.ensure([u], t)
 
     # ------------------------------------------------------------- internal
     def _freshest_tier(self, e: _Entry) -> Optional[str]:
@@ -169,3 +311,6 @@ class MDSS:
         self.bytes_moved.clear()
         self.modeled_seconds = 0.0
         self.sync_events.clear()
+        self.prefetch_ops = 0
+        self.prefetch_bytes = 0
+        self.fenced_puts = 0

@@ -44,6 +44,9 @@ class OffloadReport:
     code_only: bool
     remote: bool = False            # executed in a fabric worker process
     worker_pid: int = 0             # pid of that worker (0 = in-process)
+    fenced: bool = False            # write-back refused: a newer version
+                                    # landed while this execution ran
+                                    # (speculation loser / stale straggler)
 
 
 class MigrationManager:
@@ -105,6 +108,10 @@ class MigrationManager:
         tier = self.tiers[tier_name]
         uris = list(step.inputs)
         stale = self.mdss.stale_bytes(uris, tier_name)
+        # snapshot output versions: the write-back below is fenced on them,
+        # so a slow duplicate (speculation loser) can't clobber data a
+        # faster twin or a downstream step has already published
+        out_versions = {k: self.mdss.version(k) for k in step.outputs}
         bytes_in, kwargs = self._stage_inputs(step, tier_name, uris)
         fabric = getattr(tier, "worker_pool", None)
         if fabric is not None and fabric.can_run(step):
@@ -132,16 +139,24 @@ class MigrationManager:
         missing = set(step.outputs) - set(out)
         if missing:
             raise StepFailure(f"step {step.name} missing outputs {missing}")
-        bytes_out = 0
-        for k in step.outputs:
-            self.mdss.put(k, out[k], tier=tier_name)
-            bytes_out += nbytes_of(out[k])
-        if remote:
+        # all-or-nothing fenced publish: twins can never interleave a
+        # mixed set of one step's outputs
+        published = self.mdss.put_many(
+            {k: out[k] for k in step.outputs}, tier=tier_name,
+            expect_versions=out_versions)
+        fenced = published is None
+        bytes_out = 0 if fenced else sum(nbytes_of(out[k])
+                                         for k in step.outputs)
+        if remote and not fenced:   # a refused publish moved no output bytes
             bytes_out = wire_bytes_out
-        self.cost_model.stats_for(step.name).observe(tier_name, dt)
+        if not fenced:
+            # a fenced run is a stale straggler — its wall time must not
+            # pollute the runtime EMA the speculation trigger feeds on
+            self.cost_model.stats_for(step.name).observe(tier_name, dt)
         rep = OffloadReport(step.name, tier_name, dt, bytes_in, bytes_out,
                             code_only=(stale == 0 and bool(uris)),
-                            remote=remote, worker_pid=worker_pid)
+                            remote=remote, worker_pid=worker_pid,
+                            fenced=fenced)
         self.reports.append(rep)
         return rep
 

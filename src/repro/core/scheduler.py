@@ -17,35 +17,89 @@ fabric is attached: every RPCTransport ship feeds
 ``CostModel.observe_bandwidth`` and ``CostModel.transfer_time`` prefers
 that EMA over the static ``DCN_BW`` link constant, so offload decisions
 track what the wire actually delivers.
+
+Policies also carry a **dispatch-priority hook** for the event-driven
+executor: when more steps are ready than workers, higher-priority steps
+dispatch first. The default ordering is critical-path-length-first
+(``critical_path_lengths``): the long pole of a wide heterogeneous DAG
+starts as early as possible, which is what bounds makespan.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Protocol
+from typing import Dict, Optional, Protocol
 
 from repro.core.cost_model import CostModel
 from repro.core.mdss import MDSS
-from repro.core.workflow import Step
+from repro.core.workflow import Step, Workflow
+
+
+def critical_path_lengths(wf: Workflow, cost_model: Optional[CostModel] = None,
+                          cloud_tier: str = "cloud",
+                          default_cost: float = 1.0,
+                          succ: Optional[Dict[str, set]] = None
+                          ) -> Dict[str, float]:
+    """Longest path (in estimated seconds) from each step to any sink.
+
+    Step weight prefers the cost model's estimate (measured EMA, XLA cost
+    analysis or developer hints); with no estimate every step weighs
+    ``default_cost`` and the priority degrades to DAG depth. Workflow
+    declaration order is a topological order (all dataflow edges point
+    forward), so one reverse sweep suffices. Pass a precomputed ``succ``
+    (from :meth:`Workflow.successors`) to avoid rebuilding the edge map.
+    """
+    succ = wf.successors() if succ is None else succ
+    cpl: Dict[str, float] = {}
+    for s in reversed(wf.toplevel()):
+        w = default_cost
+        if cost_model is not None:
+            est = cost_model.exec_time(s, "local")
+            if cloud_tier in cost_model.tiers:
+                est = max(est, cost_model.exec_time(s, cloud_tier))
+            if est > 0:
+                w = est
+        cpl[s.name] = w + max((cpl[m] for m in succ[s.name]), default=0.0)
+    return cpl
 
 
 class OffloadPolicy(Protocol):
     def should_offload(self, step: Step) -> bool: ...
 
+    def dispatch_priority(self, step: Step) -> float: ...
+
+
+class DispatchPriorityMixin:
+    """Critical-path-first dispatch ordering, shared by all policies.
+
+    The executor seeds ``set_priorities`` with ``critical_path_lengths``;
+    until then every step ties at 0.0 and dispatch falls back to workflow
+    declaration order.
+    """
+    _priorities: Optional[Dict[str, float]] = None
+
+    def set_priorities(self, priorities: Dict[str, float]):
+        self._priorities = dict(priorities)
+
+    def dispatch_priority(self, step: Step) -> float:
+        if not self._priorities:
+            return 0.0
+        return self._priorities.get(step.name, 0.0)
+
 
 @dataclass
-class AnnotatePolicy:
+class AnnotatePolicy(DispatchPriorityMixin):
     def should_offload(self, step: Step) -> bool:
         return step.remotable
 
 
 @dataclass
-class NeverPolicy:
+class NeverPolicy(DispatchPriorityMixin):
     def should_offload(self, step: Step) -> bool:
         return False
 
 
 @dataclass
-class CostModelPolicy:
+class CostModelPolicy(DispatchPriorityMixin):
     cost_model: CostModel
     mdss: MDSS
     cloud_tier: str = "cloud"

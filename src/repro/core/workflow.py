@@ -114,19 +114,54 @@ class Workflow:
         return out
 
     def dependencies(self) -> Dict[str, set]:
-        """Dataflow DAG over top-level steps (read-after-write + write order)."""
+        """Dataflow DAG over top-level steps.
+
+        Edges: read-after-write (a reader depends on the latest writer),
+        write-after-write (a re-writer depends on the previous writer) and
+        write-after-read (a re-writer depends on every reader of the
+        previous version — otherwise a concurrent writer could clobber an
+        earlier reader's input). All edges point from earlier to later
+        steps in declaration order, so ``order`` is a valid topological
+        order of this DAG.
+        """
         deps: Dict[str, set] = {}
         last_writer: Dict[str, str] = {}
+        readers: Dict[str, List[str]] = {}     # readers since the last write
         for s in self.toplevel():
             deps[s.name] = set()
             for v in s.inputs:
                 if v in last_writer:
                     deps[s.name].add(last_writer[v])
+                readers.setdefault(v, []).append(s.name)
             for v in s.outputs:
                 if v in last_writer:          # write-after-write ordering
                     deps[s.name].add(last_writer[v])
+                for r in readers.get(v, ()):  # write-after-read ordering
+                    if r != s.name:
+                        deps[s.name].add(r)
+                readers[v] = []               # new version: no readers yet
                 last_writer[v] = s.name
         return deps
+
+    def successors(self, deps: Optional[Dict[str, set]] = None
+                   ) -> Dict[str, set]:
+        """Reverse adjacency of :meth:`dependencies` (step -> dependents).
+
+        Pass a precomputed ``deps`` to avoid rebuilding the edge map.
+        """
+        deps = self.dependencies() if deps is None else deps
+        succ: Dict[str, set] = {n: set() for n in deps}
+        for n, ds in deps.items():
+            for d in ds:
+                succ[d].add(n)
+        return succ
+
+    def in_degrees(self, completed=(),
+                   deps: Optional[Dict[str, set]] = None) -> Dict[str, int]:
+        """Remaining-dependency counts, ignoring already-``completed`` steps."""
+        done = set(completed)
+        deps = self.dependencies() if deps is None else deps
+        return {n: len(ds - done) for n, ds in deps.items() if n not in done}
 
     def validate_vars(self):
         for s in self.steps.values():

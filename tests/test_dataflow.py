@@ -1,0 +1,480 @@
+"""Event-driven dataflow runtime: completion-triggered scheduling,
+transfer/compute overlap, and the concurrency-bug regression sweep.
+
+Each regression test here pins a bug the wave-barrier executor (or its
+helpers) had:
+
+  * write-after-read edges missing from ``Workflow.dependencies()``,
+  * speculation resolving to the first *finisher* instead of the first
+    *successful* finisher,
+  * a speculation loser's late write-back clobbering newer MDSS versions
+    and polluting the runtime EMA,
+  * one failed offload abandoning (and un-checkpointing) the completed
+    siblings of its wave.
+"""
+import pickle
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, EmeraldExecutor, MDSS, MigrationManager,
+                        StepFailure, Workflow, WorkflowFailure,
+                        critical_path_lengths, default_tiers, nbytes_of,
+                        partition)
+
+
+def emerald():
+    tiers = default_tiers()
+    cm = CostModel(tiers)
+    mdss = MDSS(tiers, cost_model=cm)
+    return MigrationManager(tiers, mdss, cm)
+
+
+class Trace:
+    """Thread-safe (name, phase, t) recorder shared by step fns."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.rows = []
+
+    def mark(self, name, phase):
+        with self._lock:
+            self.rows.append((name, phase, time.perf_counter()))
+
+    def at(self, name, phase):
+        return next(t for n, p, t in self.rows if n == name and p == phase)
+
+    def sleeper(self, name, seconds, out):
+        def fn(**kw):
+            self.mark(name, "start")
+            time.sleep(seconds)
+            self.mark(name, "end")
+            return {out: np.float64(seconds)}
+        return fn
+
+
+# ---------------------------------------------------------------- WAR edges
+def test_dependencies_include_write_after_read():
+    wf = Workflow("war")
+    wf.var("v")
+    wf.step("w1", lambda: {"v": np.float64(1)}, outputs=("v",),
+            jax_step=False)
+    wf.step("r", lambda v: {"out": v}, inputs=("v",), outputs=("out",),
+            jax_step=False)
+    wf.step("w2", lambda: {"v": np.float64(2)}, outputs=("v",),
+            jax_step=False)
+    deps = wf.dependencies()
+    assert "w1" in deps["r"]          # read-after-write
+    assert "w1" in deps["w2"]         # write-after-write
+    assert "r" in deps["w2"]          # write-after-read (the regression)
+    # a step rewriting its own input must not depend on itself
+    wf2 = Workflow("self")
+    wf2.var("v")
+    wf2.step("w", lambda: {"v": np.float64(1)}, outputs=("v",),
+             jax_step=False)
+    wf2.step("inc", lambda v: {"v": v + 1}, inputs=("v",), outputs=("v",),
+             jax_step=False)
+    assert wf2.dependencies()["inc"] == {"w"}
+
+
+def test_war_edge_serialises_reader_and_rewriter():
+    """A slow reader of ``v`` must finish before the next writer of ``v``
+    starts, or the writer clobbers the reader's input mid-flight."""
+    tr = Trace()
+    wf = Workflow("war_rt")
+    wf.var("x")
+
+    def slow_read(x):
+        tr.mark("r", "start")
+        time.sleep(0.2)
+        tr.mark("r", "end")
+        return {"out": np.float64(x)}
+
+    def rewrite(**kw):
+        tr.mark("w2", "start")
+        return {"x": np.float64(99.0)}
+
+    wf.step("r", slow_read, inputs=("x",), outputs=("out",),
+            remotable=True, jax_step=False)
+    wf.step("w2", rewrite, outputs=("x",), remotable=True, jax_step=False)
+    out = EmeraldExecutor(partition(wf), emerald()).run(
+        {"x": np.float64(7.0)})
+    assert float(out["out"]) == 7.0, "rewriter clobbered the reader's input"
+    assert tr.at("w2", "start") >= tr.at("r", "end")
+
+
+def test_successors_and_in_degrees_views():
+    wf = Workflow("views")
+    wf.var("x")
+    wf.step("a", lambda x: {"y": x}, inputs=("x",), outputs=("y",))
+    wf.step("b", lambda y: {"z": y}, inputs=("y",), outputs=("z",))
+    wf.step("c", lambda y: {"w": y}, inputs=("y",), outputs=("w",))
+    assert wf.successors()["a"] == {"b", "c"}
+    assert wf.in_degrees() == {"a": 0, "b": 1, "c": 1}
+    assert wf.in_degrees(completed={"a"}) == {"b": 0, "c": 0}
+
+
+# ----------------------------------------------- completion-triggered overlap
+def test_fast_branch_successor_overlaps_slow_branch():
+    """Diamond: the fast source's successor must START while the slow
+    source is still RUNNING — impossible under a wave barrier."""
+    tr = Trace()
+    wf = Workflow("diamond")
+    wf.var("x")
+    wf.step("fast", tr.sleeper("fast", 0.05, "y_fast"), inputs=("x",),
+            outputs=("y_fast",), remotable=True, jax_step=False)
+    wf.step("slow", tr.sleeper("slow", 0.45, "y_slow"), inputs=("x",),
+            outputs=("y_slow",), remotable=True, jax_step=False)
+    wf.step("mid", tr.sleeper("mid", 0.1, "y_mid"), inputs=("y_fast",),
+            outputs=("y_mid",), remotable=True, jax_step=False)
+    wf.step("join", tr.sleeper("join", 0.01, "y_join"),
+            inputs=("y_mid", "y_slow"), outputs=("y_join",), remotable=True,
+            jax_step=False)
+    ex = EmeraldExecutor(partition(wf), emerald())
+    t0 = time.perf_counter()
+    ex.run({"x": np.float64(0.0)})
+    dt = time.perf_counter() - t0
+    assert tr.at("mid", "start") < tr.at("slow", "end"), \
+        "mid waited for the slow sibling (wave barrier behaviour)"
+    assert tr.at("join", "start") >= tr.at("mid", "end")
+    assert dt < 0.45 + 0.1 + 0.2, f"no transfer of control overlap: {dt}"
+    # Property 3 survives: strict per-step suspend -> offload -> resume
+    for name in ("fast", "slow", "mid", "join"):
+        kinds = [e.kind for e in ex.events
+                 if e.step == name and e.kind in ("suspend", "offload",
+                                                  "resume")]
+        assert kinds == ["suspend", "offload", "resume"], (name, kinds)
+
+
+def test_local_lane_does_not_block_offload_harvest():
+    """A long LOCAL step must not stall completion-triggered dispatch of
+    offloaded work (the old executor ran locals in the driver thread)."""
+    tr = Trace()
+    wf = Workflow("lane")
+    wf.var("x")
+    wf.step("llocal", tr.sleeper("llocal", 0.4, "y_l"), inputs=("x",),
+            outputs=("y_l",), jax_step=False)               # local lane
+    wf.step("off", tr.sleeper("off", 0.05, "y_o"), inputs=("x",),
+            outputs=("y_o",), remotable=True, jax_step=False)
+    wf.step("off2", tr.sleeper("off2", 0.05, "y_o2"), inputs=("y_o",),
+            outputs=("y_o2",), remotable=True, jax_step=False)
+    ex = EmeraldExecutor(partition(wf), emerald())
+    ex.run({"x": np.float64(0.0)})
+    assert tr.at("off2", "start") < tr.at("llocal", "end"), \
+        "offload successor stalled behind an unrelated local step"
+
+
+# ------------------------------------------------------------ dispatch order
+def test_critical_path_lengths_and_priority_dispatch():
+    wf = Workflow("prio")
+    wf.var("x")
+    # short job declared FIRST; long chain declared after
+    wf.step("d", lambda x: {"yd": x}, inputs=("x",), outputs=("yd",),
+            remotable=True, jax_step=False)
+    wf.step("a", lambda x: {"ya": x}, inputs=("x",), outputs=("ya",),
+            remotable=True, jax_step=False)
+    wf.step("b", lambda ya: {"yb": ya}, inputs=("ya",), outputs=("yb",),
+            remotable=True, jax_step=False)
+    wf.step("c", lambda yb: {"yc": yb}, inputs=("yb",), outputs=("yc",),
+            remotable=True, jax_step=False)
+    cpl = critical_path_lengths(wf)
+    assert cpl["a"] == 3.0 and cpl["b"] == 2.0 and cpl["c"] == 1.0
+    assert cpl["d"] == 1.0
+    order = []
+    lock = threading.Lock()
+
+    def tracer(name):
+        orig = wf.steps[name].fn
+
+        def fn(**kw):
+            with lock:
+                order.append(name)
+            return orig(**kw)
+        return fn
+
+    for name in wf.steps:
+        wf.steps[name].fn = tracer(name)
+    # one worker => execution order == dispatch order; the chain head (long
+    # pole, cpl=3) must beat the earlier-declared short job (cpl=1)
+    ex = EmeraldExecutor(partition(wf), emerald(), max_workers=1)
+    ex.run({"x": np.float64(0.0)})
+    assert order.index("a") < order.index("d"), order
+
+
+# ----------------------------------------------------------- prefetch overlap
+def test_prefetch_overlaps_transfer_with_compute():
+    """Dispatching a step warms its successor's already-available inputs
+    on the cloud tier, so the successor's own staging is (near) code-only."""
+    mgr = emerald()
+    mdss = mgr.mdss
+    big = np.ones((64, 1024), np.float64)          # 512 KiB constant
+    wf = Workflow("pf")
+    wf.var("x")
+    wf.var("C")
+
+    def src(x):
+        time.sleep(0.2)                            # prefetch runs under this
+        return {"y": np.float64(1.0)}
+
+    wf.step("src", src, inputs=("x",), outputs=("y",), remotable=True,
+            jax_step=False)
+    wf.step("reduce", lambda y, C: {"out": np.float64(float(y) + C.sum())},
+            inputs=("y", "C"), outputs=("out",), remotable=True,
+            jax_step=False)
+    ex = EmeraldExecutor(partition(wf), mgr)
+    ex.run({"x": np.float64(0.0), "C": big})
+    assert mdss.prefetch_ops >= 1
+    assert mdss.prefetch_bytes >= nbytes_of(big)
+    pf = [e for e in ex.events if e.kind == "prefetch"]
+    assert pf and pf[0].step == "reduce" and "C" in pf[0].info["uris"]
+    red = next(e for e in ex.events
+               if e.kind == "offload" and e.step == "reduce")
+    # C moved during src's sleep -> reduce staged only y's 8 bytes
+    assert red.info["bytes_in"] < nbytes_of(big)
+
+
+def test_prefetch_off_switch():
+    mgr = emerald()
+    wf = Workflow("pf_off")
+    wf.var("x")
+    wf.step("a", lambda x: {"y": x}, inputs=("x",), outputs=("y",),
+            remotable=True, jax_step=False)
+    wf.step("b", lambda y: {"z": y}, inputs=("y",), outputs=("z",),
+            remotable=True, jax_step=False)
+    ex = EmeraldExecutor(partition(wf), mgr, prefetch=False)
+    ex.run({"x": np.float64(0.0)})
+    assert mgr.mdss.prefetch_ops == 0
+    assert all(e.kind != "prefetch" for e in ex.events)
+
+
+# ------------------------------------------------------- speculation winner
+def test_speculation_backup_wins_after_primary_fails():
+    """Primary fails fast AFTER the backup launches; the step must resolve
+    to the backup's later success, not raise with the primary's error."""
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def fn(x):
+        with lock:
+            calls["n"] += 1
+            n = calls["n"]
+        if n == 1:                    # seed run: fast success, feeds EMA
+            return {"y": np.float64(x)}
+        if n == 2:                    # primary: dies after backup launch
+            time.sleep(0.2)
+            raise StepFailure("injected: primary node lost")
+        time.sleep(0.5)               # backup: slower but SUCCEEDS
+        return {"y": np.float64(x) + 1}
+
+    wf = Workflow("specwin")
+    wf.var("x")
+    wf.step("s", fn, inputs=("x",), outputs=("y",), remotable=True,
+            jax_step=False)
+    ex = EmeraldExecutor(partition(wf), emerald(), speculate_after=2.0)
+    ex.run({"x": np.float64(0.0)})               # seed the runtime EMA
+    ex.events.clear()
+    out = ex.run({"x": np.float64(41.0)})
+    assert float(out["y"]) == 42.0, "backup's success was discarded"
+    assert any(e.kind == "speculate" for e in ex.events)
+    assert all(e.kind != "retry" for e in ex.events), \
+        "primary's failure beat the backup's success"
+    assert calls["n"] == 3
+
+
+def test_speculation_raises_only_when_both_twins_fail():
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def fn(x):
+        with lock:
+            calls["n"] += 1
+            n = calls["n"]
+        if n == 1:
+            return {"y": np.float64(x)}
+        time.sleep(0.15)
+        raise StepFailure(f"injected: twin {n} died")
+
+    wf = Workflow("specfail")
+    wf.var("x")
+    wf.step("s", fn, inputs=("x",), outputs=("y",), remotable=True,
+            jax_step=False, retries=1)
+    ex = EmeraldExecutor(partition(wf), emerald(), speculate_after=0.1)
+    ex.run({"x": np.float64(0.0)})
+    ex.events.clear()
+    with pytest.raises(WorkflowFailure):
+        ex.run({"x": np.float64(1.0)})
+    assert any(e.kind == "retry" for e in ex.events)
+
+
+# --------------------------------------------------- straggler write-back
+def test_loser_write_back_is_version_fenced():
+    """A speculation loser finishing late must not overwrite a newer MDSS
+    version nor feed its straggler wall time into the runtime EMA."""
+    mgr = emerald()
+    mdss = mgr.mdss
+    wf = Workflow("fence")
+    wf.var("x")
+
+    def slow(x):
+        time.sleep(0.3)
+        return {"y": np.float64(1.0)}
+
+    s = wf.step("s", slow, inputs=("x",), outputs=("y",), remotable=True,
+                jax_step=False)
+    mdss.put("x", np.float64(0.0), tier="local")
+    loser = {}
+    th = threading.Thread(
+        target=lambda: loser.setdefault("rep", mgr.execute(s, "cloud")))
+    th.start()
+    time.sleep(0.05)
+    # the winner (or a downstream step) publishes a newer version of y
+    # while the loser is still executing
+    mdss.put("y", np.float64(7.0), tier="local")
+    th.join()
+    assert loser["rep"].fenced is True
+    assert mdss.fenced_puts == 1
+    assert float(mdss.get("y", "local")) == 7.0, \
+        "stale loser clobbered the newer version"
+    assert "cloud" not in mgr.cost_model.stats_for("s").measured_s, \
+        "fenced straggler polluted the runtime EMA"
+
+
+def test_normal_write_back_unfenced():
+    mgr = emerald()
+    wf = Workflow("unfenced")
+    wf.var("x")
+    s = wf.step("s", lambda x: {"y": np.float64(2.0)}, inputs=("x",),
+                outputs=("y",), remotable=True, jax_step=False)
+    mgr.mdss.put("x", np.float64(0.0), tier="local")
+    rep = mgr.execute(s, "cloud")
+    assert rep.fenced is False
+    assert "cloud" in mgr.cost_model.stats_for("s").measured_s
+
+
+# ------------------------------------------------- partial-progress survival
+def test_failed_sibling_keeps_survivors_in_checkpoint(tmp_path):
+    """Crash one of three parallel offloads: the two survivors must land
+    in ``completed`` AND in the checkpoint, and resume must re-run only
+    the crashed step (the wave executor lost the whole wave)."""
+    state = {"crash": True}
+    ran = []
+    lock = threading.Lock()
+
+    def make(name, seconds, crash=False):
+        def fn(x):
+            with lock:
+                ran.append(name)
+            if crash and state["crash"]:
+                raise StepFailure("injected: node power loss")
+            time.sleep(seconds)
+            return {f"y_{name}": np.float64(seconds)}
+        return fn
+
+    def build():
+        wf = Workflow("partial")
+        wf.var("x")
+        wf.step("boom", make("boom", 0.0, crash=True), inputs=("x",),
+                outputs=("y_boom",), remotable=True, jax_step=False,
+                retries=0)
+        wf.step("ok1", make("ok1", 0.25), inputs=("x",), outputs=("y_ok1",),
+                remotable=True, jax_step=False)
+        wf.step("ok2", make("ok2", 0.25), inputs=("x",), outputs=("y_ok2",),
+                remotable=True, jax_step=False)
+        return wf
+
+    ex = EmeraldExecutor(partition(build()), emerald(),
+                         checkpoint_dir=str(tmp_path))
+    with pytest.raises(WorkflowFailure):
+        ex.run({"x": np.float64(0.0)})
+    with open(tmp_path / "partial.wfckpt", "rb") as f:
+        ckpt = pickle.load(f)
+    assert set(ckpt["completed"]) == {"ok1", "ok2"}, \
+        "survivors of the failed wave were not checkpointed"
+    assert {"y_ok1", "y_ok2"} <= set(ckpt["vars"])
+    # resume: only the crashed step re-runs
+    state["crash"] = False
+    ran.clear()
+    ex2 = EmeraldExecutor(partition(build()), emerald(),
+                          checkpoint_dir=str(tmp_path))
+    out = ex2.run({"x": np.float64(0.0)}, resume=True)
+    assert ran == ["boom"], f"resume re-ran finished work: {ran}"
+    assert {"y_boom", "y_ok1", "y_ok2"} <= set(out)
+
+
+def test_checkpoints_are_incremental_per_completion(tmp_path):
+    wf = Workflow("incr")
+    wf.var("x")
+    wf.step("a", lambda x: {"y": x}, inputs=("x",), outputs=("y",),
+            remotable=True, jax_step=False)
+    wf.step("b", lambda y: {"z": y}, inputs=("y",), outputs=("z",),
+            remotable=True, jax_step=False)
+    ex = EmeraldExecutor(partition(wf), emerald(),
+                         checkpoint_dir=str(tmp_path))
+    ex.run({"x": np.float64(3.0)})
+    ckpts = [e for e in ex.events if e.kind == "checkpoint"]
+    assert [c.info["n"] for c in ckpts] == [1, 2], \
+        "checkpointing is not per-completion"
+
+
+def test_checkpoint_never_contains_inflight_outputs(tmp_path):
+    """Invariant: a checkpoint may only hold init/resume vars and outputs
+    of steps its own ``completed`` set records — never the published
+    outputs of a step still in flight (resume would double-apply a
+    non-idempotent step on top of its own effects)."""
+    wf = Workflow("consistent")
+    wf.var("x")
+    wf.var("v")
+    wf.step("fast", lambda x: {"y_fast": np.float64(1)}, inputs=("x",),
+            outputs=("y_fast",), remotable=True, jax_step=False)
+
+    def inc(v):
+        time.sleep(0.2)                  # in flight while fast checkpoints
+        return {"v": np.float64(v) + 1}
+
+    wf.step("inc", inc, inputs=("v",), outputs=("v",), remotable=True,
+            jax_step=False)
+    ex = EmeraldExecutor(partition(wf), emerald(),
+                         checkpoint_dir=str(tmp_path))
+    seen = []
+    orig = ex._save_checkpoint
+
+    def spy(completed):
+        orig(completed)
+        with open(tmp_path / "consistent.wfckpt", "rb") as f:
+            c = pickle.load(f)
+        seen.append((set(c["completed"]), set(c["vars"]),
+                     {u: float(v) for u, v in c["vars"].items()}))
+
+    ex._save_checkpoint = spy
+    ex.run({"x": np.float64(0.0), "v": np.float64(0.0)})
+    assert len(seen) == 2
+    for completed, uris, vals in seen:
+        allowed = {"x", "v"} | {u for n in completed
+                                for u in wf.steps[n].outputs}
+        assert uris <= allowed, (completed, uris)
+        if "inc" not in completed:
+            assert vals["v"] == 0.0, "checkpoint saw in-flight inc's write"
+
+
+# ----------------------------------------------------- broker harvest (fabric)
+def test_broker_nonblocking_harvest():
+    Fabric = pytest.importorskip("repro.cloud").Fabric
+    with Fabric(workers=1) as fabric:
+        fired = []
+        tasks = [fabric.broker.submit(step="spin",
+                                      kwargs={"seconds": 0.05})
+                 for _ in range(3)]
+        tasks[0].add_done_callback(lambda t: fired.append(t.task_id))
+        assert not tasks[-1].done()          # nothing has had time to finish
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            finished, pending = fabric.broker.harvest(tasks)
+            if not pending:
+                break
+            time.sleep(0.01)
+        assert len(finished) == 3 and not pending
+        assert fired == [tasks[0].task_id]
+        for t in tasks:
+            t.result(1)                      # already done: returns at once

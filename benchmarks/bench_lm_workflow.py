@@ -34,6 +34,7 @@ def main() -> List[str]:
         moved = tr.mdss.total_bytes_moved() / 5
         rows.append(row(f"lm_train_step_{policy}", t,
                         f"bytes/step={moved:.0f}"))
+        tr.close()
     # serving decode footprint
     run_s = RunConfig(model=cfg, shape=ShapeProfile("s", 128, 4, "decode"),
                       remat="none")
@@ -51,6 +52,7 @@ def main() -> List[str]:
     toks = srv.stats["tokens_out"] + 4
     rows.append(row("lm_serve_per_token", dt / max(toks, 1),
                     f"decode_bytes={sum(rep['bytes_moved'].values())}"))
+    srv.close()
     return rows
 
 

@@ -10,6 +10,9 @@
   bench_dag              beyond-paper    (event-driven executor vs wave
                                           barrier on a wide heterogeneous
                                           DAG; critical-path gap)
+  bench_runtime          beyond-paper    (multi-tenant runtime: K
+                                          concurrent submissions vs K
+                                          serial runs; warm resubmission)
 
 Prints ``name,us_per_call,derived`` CSV. Roofline numbers come from the
 dry-run (see launch/dryrun.py), not from here — this container's CPU wall
@@ -24,11 +27,13 @@ import time
 def main() -> None:
     from benchmarks import (bench_at, bench_dag, bench_fabric,
                             bench_lm_workflow, bench_mdss,
-                            bench_parallel_offload, bench_partitioner)
+                            bench_parallel_offload, bench_partitioner,
+                            bench_runtime)
     modules = [
         ("bench_mdss", bench_mdss),
         ("bench_parallel_offload", bench_parallel_offload),
         ("bench_dag", bench_dag),
+        ("bench_runtime", bench_runtime),
         ("bench_partitioner", bench_partitioner),
         ("bench_fabric", bench_fabric),
         ("bench_at", bench_at),

@@ -44,6 +44,7 @@ def main():
           f"of {args.batch}x{args.seq} tokens")
     tr.fit(args.steps, resume=args.resume, log_every=10)
     print("transfer report:", tr.transfer_report())
+    tr.close()
 
 
 if __name__ == "__main__":

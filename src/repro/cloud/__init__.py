@@ -71,12 +71,15 @@ class Fabric:
             return False
 
     def submit_step(self, step, kwargs: dict,
-                    max_attempts: Optional[int] = None) -> Task:
+                    max_attempts: Optional[int] = None,
+                    priority: int = 0) -> Task:
         if getattr(step, "remote_impl", None):
             return self.broker.submit(step=step.remote_impl, kwargs=kwargs,
-                                      max_attempts=max_attempts)
+                                      max_attempts=max_attempts,
+                                      priority=priority)
         return self.broker.submit(fn_bytes=pickle.dumps(step.fn),
-                                  kwargs=kwargs, max_attempts=max_attempts)
+                                  kwargs=kwargs, max_attempts=max_attempts,
+                                  priority=priority)
 
     def ship(self, value, timeout: Optional[float] = 60.0) -> Task:
         return self.broker.ship(value, timeout=timeout)

@@ -10,6 +10,13 @@ test) that compares the broker's observed state against two signals:
     ``target_drain_s`` (the cost-model signal: seconds of queued work,
     not just task count).
 
+Under the multi-tenant runtime, pressure is **aggregate across runs**:
+the broker queue already pools every tenant's submitted tasks, and an
+optional ``backlog_fn`` adds work the runtime is still holding in its
+per-run ready heaps (steps admitted but not yet granted a lane), so a
+burst of concurrent submissions scales the pool before the broker queue
+alone would show it — and a nonzero runtime backlog blocks scale-down.
+
 Scale-down is deliberately slower than scale-up (classic asymmetric
 policy): only after the pool has been fully idle with an empty queue for
 ``idle_scale_down_s`` does one worker retire per tick — and retiring
@@ -24,7 +31,7 @@ import math
 import threading
 import time
 from dataclasses import dataclass
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.cloud.broker import Broker
 
@@ -40,19 +47,31 @@ class AutoscalerConfig:
 
 
 class Autoscaler:
-    def __init__(self, broker: Broker, config: Optional[AutoscalerConfig] = None):
+    def __init__(self, broker: Broker, config: Optional[AutoscalerConfig] = None,
+                 backlog_fn: Optional[Callable[[], int]] = None):
         self.broker = broker
         self.config = config or AutoscalerConfig()
+        # aggregate pressure beyond the broker queue: e.g. the multi-tenant
+        # runtime's cross-run count of ready-but-unlaned offload steps
+        self.backlog_fn = backlog_fn
         self._idle_since: Optional[float] = None
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.scale_ups = 0
         self.scale_downs = 0
 
+    def _backlog(self) -> int:
+        if self.backlog_fn is None:
+            return 0
+        try:
+            return max(0, int(self.backlog_fn()))
+        except Exception:
+            return 0   # runtime mid-shutdown
+
     # ----------------------------------------------------------------- tick
     def desired_workers(self) -> int:
         cfg = self.config
-        depth = self.broker.queue_depth()
+        depth = self.broker.queue_depth() + self._backlog()
         n = max(1, self.broker.num_workers())
         desired = self.broker.num_workers()
         if depth / n > cfg.queue_high:
@@ -70,7 +89,7 @@ class Autoscaler:
         cfg = self.config
         now = time.monotonic() if now is None else now
         n = self.broker.num_workers()
-        depth = self.broker.queue_depth()
+        depth = self.broker.queue_depth() + self._backlog()
         busy = self.broker.inflight()
         action = {"workers": n, "queue": depth, "added": 0, "retired": 0,
                   "reaped": 0}

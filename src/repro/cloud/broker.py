@@ -1,9 +1,12 @@
 """Task broker: queues offloads, dispatches to workers, survives crashes.
 
 The broker is the cloud-side "service" of the paper's Emerald: it owns a
-FIFO task queue, a dispatcher thread that pairs queued tasks with idle
-workers, one reader thread per worker socket, and a monitor thread that
-watches heartbeats / process liveness. Failure semantics:
+priority task queue (higher ``priority`` classes dispatch first, FIFO
+within a class — an interactive run's tasks overtake a batch run's), a
+dispatcher thread that pairs queued tasks with idle workers the moment
+either appears (condition-variable driven, no polling), one reader
+thread per worker socket, and a monitor thread that watches heartbeats /
+process liveness. Failure semantics:
 
   * a worker that dies (socket EOF, process exit, stale heartbeat) has
     its in-flight task **requeued at the front** with the dead worker
@@ -52,6 +55,7 @@ class Task:
     fn_bytes: Optional[bytes] = None
     kwargs: Optional[dict] = None
     value: Any = None               # ship payload
+    priority: int = 0               # dispatch class; higher preempts queue
     max_attempts: int = 3
     attempts: int = 0               # placements so far
     exclude: Set[str] = field(default_factory=set)
@@ -114,7 +118,7 @@ class Broker:
     def submit(self, *, step: Optional[str] = None,
                fn_bytes: Optional[bytes] = None, kwargs: Optional[dict] = None,
                value: Any = None, kind: str = "task",
-               max_attempts: Optional[int] = None) -> Task:
+               max_attempts: Optional[int] = None, priority: int = 0) -> Task:
         if kind == "task" and not step and fn_bytes is None:
             raise FabricError("task needs a registry step name or fn_bytes")
         with self._cond:
@@ -122,7 +126,7 @@ class Broker:
                 raise FabricError("broker is shut down")   # mid-shutdown
             self._task_counter += 1
             t = Task(self._task_counter, kind, step=step, fn_bytes=fn_bytes,
-                     kwargs=kwargs, value=value,
+                     kwargs=kwargs, value=value, priority=priority,
                      max_attempts=max_attempts or self.max_attempts)
             self._queue.append(t)
             self._cond.notify_all()
@@ -238,16 +242,33 @@ class Broker:
                     idle = [h for h in self._workers.values()
                             if h.state == "idle"]
                     if self._queue and idle:
+                        # highest priority class first, FIFO within a
+                        # class (requeued tasks sit at the queue front of
+                        # their class); skip tasks whose only candidates
+                        # are excluded (dead-worker history). The scan
+                        # stops at the first placeable task of the top
+                        # class present, so a deep single-class queue
+                        # dispatches in O(1) candidate checks, not O(n).
+                        best = None
+                        top = max(t.priority for t in self._queue)
                         for i, t in enumerate(self._queue):
                             cands = [h for h in idle
                                      if h.worker_id not in t.exclude]
-                            if cands:
-                                task, worker = t, cands[0]
-                                del self._queue[i]
-                                break
+                            if cands and (best is None
+                                          or t.priority > best[1].priority):
+                                best = (i, t, cands[0])
+                                if t.priority >= top:
+                                    break
+                        if best is not None:
+                            task, worker = best[1], best[2]
+                            del self._queue[best[0]]
                     if task is not None:
                         break
-                    self._cond.wait(0.1)
+                    # untimed: every state change that could make work
+                    # dispatchable (submit, worker idle/added, death,
+                    # shutdown) notify_alls this condition — no polling
+                    # tax, no 100 ms dispatch latency floor
+                    self._cond.wait()
                 if self._closed:
                     return
                 worker.state = "busy"

@@ -1,379 +1,141 @@
-"""Emerald distributed-execution runtime (paper §3.3 + §6-scale features).
+"""Emerald single-workflow executor — compat shim over the runtime.
 
-Event-driven dataflow executor over a partitioned workflow's DAG:
+Historically this module owned the event-driven dataflow loop. That loop
+now lives in :mod:`repro.core.runtime` as the multi-run dispatcher of
+``EmeraldRuntime`` (one long-lived scheduler serving N concurrent
+workflows over shared lanes); ``EmeraldExecutor`` keeps the original
+one-workflow-at-a-time API by submitting into a runtime and blocking on
+the handle:
 
-  * non-remotable steps run on the local tier,
-  * at a migration point the workflow *suspends*, the target step offloads
-    through the MigrationManager, then execution *resumes* — strictly
-    alternating per step (Property 3),
-  * scheduling is **completion-triggered**: every finished step (local or
-    offloaded) immediately decrements its successors' in-degree and
-    newly-ready steps dispatch at once — there is no wave barrier, so a
-    1-second offload unlocks its downstream work while a 30-second sibling
-    is still running (paper Fig 9b taken to its conclusion),
-  * local steps run on their own worker lane, never blocking the driver's
-    harvest of offload completions,
-  * when more steps are ready than workers, dispatch order follows the
-    scheduler policy's priority hook (critical-path-length first),
-  * dispatching a step also **prefetches** its likely successors' inputs
-    onto the cloud tier (``MDSS.prefetch``) so transfer overlaps compute,
-  * offload policy: ``annotate`` (paper-faithful: every remotable step goes
-    to the cloud), ``cost_model`` (beyond-paper: offload only when the
-    roofline model predicts benefit), ``never`` (paper's baseline arm).
+  * constructed the classic way, ``run()`` spins up a private runtime for
+    the call and tears it down after — identical lifecycle (and thread
+    footprint) to the pre-runtime executor, with the same event stream
+    (suspend/offload/resume alternation per step, retries, speculation,
+    prefetch, per-completion checkpoints),
+  * constructed with ``runtime=``, the executor becomes a typed front-end
+    onto a *shared* runtime: several executors (e.g. a server's prefill
+    and decode workflows) interleave over one scheduler, one fabric, one
+    MDSS — see ``launch/serve.py``,
+  * either way the MigrationManager is shared state, so compile caches
+    and cost-model statistics survive across ``run()`` calls exactly as
+    before.
 
-Scale features (DESIGN.md §6):
-  * retry with tier fallback — a failed offload re-runs, ultimately locally,
-  * straggler speculation — a remotable step that overruns
-    ``speculate_after`` x its EMA runtime is duplicated on another tier;
-    the first *successful* finisher wins (a fast failure does not beat a
-    slower success), and the loser's write-back is version-fenced,
-  * checkpoints are incremental: every completion is durable as soon as it
-    happens, and a sibling's failure never abandons finished work — the
-    runtime drains in-flight steps, checkpoints the survivors, then raises.
+Checkpoint mechanics are inherited from :class:`RunCheckpointer` — the
+executor itself is the per-run checkpointer it hands to the runtime, so
+the snapshot-cache invariants (and tests that instrument
+``_save_checkpoint``) are preserved.
+
+``Event`` and ``WorkflowFailure`` are defined in ``repro.core.runtime``
+and re-exported here for compatibility.
 """
 from __future__ import annotations
 
-import heapq
-import os
-import pickle
-import queue
 import threading
-import time
-from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
-from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
-import jax
-import numpy as np
-
-from repro.core.mdss import MDSS, nbytes_of
-from repro.core.migration import MigrationManager, StepFailure
+from repro.core.migration import MigrationManager
 from repro.core.partitioner import PartitionedWorkflow
-from repro.core.scheduler import critical_path_lengths, make_policy
-from repro.core.workflow import Step
+from repro.core.runtime import (EmeraldRuntime, Event,  # noqa: F401
+                                RunCheckpointer, RunHandle, WorkflowFailure)
 
 
-@dataclass
-class Event:
-    kind: str          # suspend | offload | resume | local | retry |
-                       # speculate | prefetch | checkpoint
-    step: str
-    tier: str = ""
-    t: float = 0.0
-    info: dict = field(default_factory=dict)
-
-
-class WorkflowFailure(RuntimeError):
-    pass
-
-
-class EmeraldExecutor:
+class EmeraldExecutor(RunCheckpointer):
     def __init__(self, pwf: PartitionedWorkflow, manager: MigrationManager,
                  *, policy: str = "annotate", cloud_tier: str = "cloud",
                  max_workers: int = 8, local_workers: int = 4,
                  speculate_after: Optional[float] = None,
                  checkpoint_dir: Optional[str] = None,
-                 prefetch: bool = True):
+                 prefetch: bool = True,
+                 runtime: Optional[EmeraldRuntime] = None):
         assert policy in ("annotate", "cost_model", "never")
         self.pwf = pwf
-        self.wf = pwf.workflow
         self.manager = manager
-        self.mdss = manager.mdss
-        self.policy = policy
-        self._policy = make_policy(policy, manager.cost_model, manager.mdss,
-                                   cloud_tier)
+        RunCheckpointer.__init__(self, manager.mdss, pwf.workflow,
+                                 checkpoint_dir)
+        self.policy = policy       # resolved per run by the runtime
         self.cloud_tier = cloud_tier
         self.max_workers = max_workers
         self.local_workers = local_workers
         self.speculate_after = speculate_after
-        self.checkpoint_dir = checkpoint_dir
         self.prefetch = prefetch
+        self._runtime = runtime           # shared runtime (None = per-run)
+        # every run's events (including checkpoint events — submit rebinds
+        # the checkpointer's _emit to the run's emitter) land here
         self.events: List[Event] = []
-        self._lock = threading.Lock()
-        # uri -> (version, host snapshot), fed ONLY from init/resume vars
-        # and the outputs of harvested completions. Checkpoints snapshot
-        # this cache, never the live store, so a checkpoint can't capture
-        # the published outputs of a step that is still in flight (which
-        # resume would then double-apply on a non-idempotent step). Also
-        # keeps the per-completion pull O(changed vars); the full-snapshot
-        # pickle write itself remains O(vars).
-        self._ckpt_cache: Dict[str, tuple] = {}
-
-    # ---------------------------------------------------------------- events
-    def _emit(self, kind, step, tier="", **info):
-        with self._lock:
-            self.events.append(Event(kind, step, tier, time.perf_counter(), info))
-
-    # ------------------------------------------------------------ checkpoint
-    def _ckpt_path(self):
-        return os.path.join(self.checkpoint_dir, f"{self.wf.name}.wfckpt")
-
-    def _cache_var(self, uri: str):
-        """Snapshot ``uri``'s freshest value into the checkpoint cache
-        (skip if the cached version is already current). Uses a reference
-        read (``peek_latest``) — no cross-tier transfer lands on the
-        driver thread for checkpointing."""
-        val, ver = self.mdss.peek_latest(uri)
-        if ver and self._ckpt_cache.get(uri, (0, None))[0] != ver:
-            self._ckpt_cache[uri] = (ver, jax.tree.map(np.asarray, val))
-
-    def _cache_outputs(self, harvested: Step):
-        """Snapshot a harvested step's outputs into the checkpoint cache.
-
-        Must run BEFORE the step's successors dispatch: the outputs are
-        final right now (WAW/WAR edges keep any later writer blocked until
-        this harvest), so the reference read snapshots exactly what was
-        published — no transfer involved. The pickle write itself
-        (``_save_checkpoint``) has no ordering constraint and runs after
-        dispatch, off the critical path.
-        """
-        if self.checkpoint_dir:
-            for uri in harvested.outputs:
-                self._cache_var(uri)
-
-    def _save_checkpoint(self, completed):
-        if not self.checkpoint_dir:
-            return
-        os.makedirs(self.checkpoint_dir, exist_ok=True)
-        snapshot = {uri: val for uri, (_, val) in self._ckpt_cache.items()}
-        tmp = self._ckpt_path() + ".tmp"
-        with open(tmp, "wb") as f:
-            pickle.dump({"completed": sorted(completed), "vars": snapshot}, f)
-        os.replace(tmp, self._ckpt_path())
-        self._emit("checkpoint", "<workflow>", n=len(completed))
-
-    def _load_checkpoint(self):
-        if not self.checkpoint_dir or not os.path.exists(self._ckpt_path()):
-            return None
-        with open(self._ckpt_path(), "rb") as f:
-            return pickle.load(f)
+        self._live_handle: Optional[RunHandle] = None
 
     # ------------------------------------------------------------------- run
     def run(self, init_vars: Dict[str, Any], *, resume: bool = False,
             fetch=None):
-        """Execute the workflow.
+        """Execute the workflow (blocking single-run API).
 
         ``fetch`` limits which variables are synced back to the local tier
         at re-integration (default: all). Leaving hot state (params,
         optimizer state) un-fetched keeps it resident on the cloud tier so
         the next run's offloads are code-only — the paper's MDSS saving.
         """
-        return self._run(init_vars, resume=resume, fetch=fetch)
+        return self.submit(init_vars, resume=resume, fetch=fetch).result()
 
-    def _run(self, init_vars: Dict[str, Any], *, resume: bool = False,
-             fetch=None):
-        completed: set = set()
-        for uri, val in init_vars.items():
-            if uri not in self.wf.variables:
-                self.wf.var(uri)
-            self.mdss.put(uri, val, tier="local")
-        if resume:
-            state = self._load_checkpoint()
-            if state is not None:
-                completed = set(state["completed"])
-                for uri, val in state["vars"].items():
-                    self.mdss.put(uri, val, tier="local")
-        if self.checkpoint_dir:
-            # seed from EVERY resident variable (init/resume vars and state
-            # carried over from a previous run on this MDSS): nothing is in
-            # flight yet, so everything resident is completed work and
-            # belongs in the snapshots
-            for uri in self.wf.variables:
-                self._cache_var(uri)
+    def submit(self, init_vars: Dict[str, Any], *, resume: bool = False,
+               fetch=None, weight: float = 1.0, priority: int = 0
+               ) -> RunHandle:
+        """Non-blocking variant of :meth:`run` for shared-runtime use.
 
-        steps = {s.name: s for s in self.wf.toplevel()}
-        completed &= set(steps)
-        # one dependency-graph build feeds all three views
-        deps = self.wf.dependencies()
-        succs = self.wf.successors(deps=deps)
-        indeg = self.wf.in_degrees(completed, deps=deps)
-        order_idx = {n: i for i, n in enumerate(self.wf.order)}
-        if hasattr(self._policy, "set_priorities"):
-            self._policy.set_priorities(critical_path_lengths(
-                self.wf, self.manager.cost_model, self.cloud_tier,
-                succ=succs))
+        With a private (per-call) runtime the handle's lifecycle owns the
+        runtime teardown: the lanes are joined when the result resolves,
+        exactly like the classic blocking ``run``.
 
-        # completion queue: worker lanes push (step, error, offloaded?),
-        # the driver reacts to each completion individually — no barrier
-        done_q: "queue.SimpleQueue" = queue.SimpleQueue()
-        # per-lane priority heaps + busy counts: a step is SUBMITTED only
-        # when its lane has a free worker, so a high-priority step that
-        # becomes ready later still overtakes queued low-priority work
-        ready_off: List[tuple] = []
-        ready_loc: List[tuple] = []
-        busy = {True: 0, False: 0}           # keyed by offloaded?
-        failures: List[BaseException] = []
-        offload_pool = ThreadPoolExecutor(max_workers=self.max_workers,
-                                          thread_name_prefix="emerald-offload")
-        local_pool = ThreadPoolExecutor(max_workers=self.local_workers,
-                                        thread_name_prefix="emerald-local")
-
-        def push_ready(name: str):
-            s = steps[name]
-            prio = 0.0
-            if hasattr(self._policy, "dispatch_priority"):
-                prio = self._policy.dispatch_priority(s)
-            heap = ready_off if self._should_offload(s) else ready_loc
-            heapq.heappush(heap, (-prio, order_idx[name], name))
-
-        def dispatch():
-            for heap, offload, pool, fn, slots in (
-                    (ready_off, True, offload_pool,
-                     self._offload_with_recovery, self.max_workers),
-                    (ready_loc, False, local_pool, self._run_local,
-                     self.local_workers)):
-                while heap and busy[offload] < slots and not failures:
-                    _, _, name = heapq.heappop(heap)
-                    s = steps[name]
-                    self._prefetch_successors(s, succs)
-                    if offload:
-                        self._emit("suspend", s.name)
-                    pool.submit(self._lane, fn, s, done_q, offload)
-                    busy[offload] += 1
-
-        for n, d in indeg.items():
-            if d == 0:
-                push_ready(n)
-        try:
-            dispatch()
-            while len(completed) < len(steps):
-                if busy[True] + busy[False] == 0:
-                    if failures:
-                        raise failures[0]
-                    raise WorkflowFailure("dependency cycle or failed step")
-                name, err, offloaded = done_q.get()
-                busy[offloaded] -= 1
-                if err is not None:
-                    failures.append(err)
-                    continue                 # keep draining siblings
-                if offloaded:
-                    self._emit("resume", name)
-                completed.add(name)
-                self._cache_outputs(steps[name])
-                for m in succs.get(name, ()):
-                    if m in indeg and m not in completed:
-                        indeg[m] -= 1
-                        if indeg[m] == 0:
-                            push_ready(m)
-                dispatch()
-                # durable per completion, not per wave: a later sibling
-                # failure cannot lose this step's work. Written after
-                # dispatch so THIS completion's successors start before the
-                # pickle lands (completions arriving during the write still
-                # wait — the durability-first tradeoff of sync checkpoints).
-                self._save_checkpoint(completed)
-        finally:
-            offload_pool.shutdown(wait=True)
-            local_pool.shutdown(wait=True)
-            self._ckpt_cache.clear()     # release pinned host copies
-        # re-integrate: requested workflow variables synced back to local
-        uris = fetch if fetch is not None else [
-            u for u in self.wf.variables if self.mdss.version(u)]
-        return {uri: self.mdss.get(uri, "local") for uri in uris
-                if self.mdss.version(uri)}
-
-    # -------------------------------------------------------------- dispatch
-    def _lane(self, fn, s: Step, done_q, offloaded: bool):
-        try:
-            fn(s)
-            done_q.put((s.name, None, offloaded))
-        except BaseException as e:           # harvested by the driver
-            done_q.put((s.name, e, offloaded))
-
-    def _prefetch_successors(self, s: Step, succs):
-        """Warm the cloud tier with a dispatched step's successors' inputs.
-
-        Only inputs that already exist and are stale on the cloud tier
-        move; outputs of still-running steps are skipped (MDSS.prefetch is
-        best-effort and version-hazard-checked), so the transfer safely
-        overlaps this step's compute.
+        The executor is its own per-run checkpointer (one snapshot cache,
+        one ``<wf>.wfckpt`` file), so with ``checkpoint_dir`` set its runs
+        must not overlap — concurrent checkpointed submissions belong on
+        ``EmeraldRuntime.submit`` (fresh checkpointer per run) or on
+        separate executors.
         """
-        if not self.prefetch or self.cloud_tier not in self.manager.tiers:
-            return
-        for m in succs.get(s.name, ()):
-            succ = self.wf.steps[m]
-            if not self._should_offload(succ):
-                continue
-            # skip vars s itself is about to rewrite: their current
-            # version is guaranteed dead by the time the successor reads
-            uris = [u for u in succ.inputs
-                    if u not in s.outputs
-                    and self.mdss.version(u)
-                    and not self.mdss.has_latest(u, self.cloud_tier)]
-            if uris and self.mdss.prefetch(uris, self.cloud_tier) is not None:
-                # emitted only for ADMITTED requests (None = shed at the
-                # MDSS concurrency cap), so the event log matches reality
-                self._emit("prefetch", succ.name, self.cloud_tier, uris=uris)
+        if self.checkpoint_dir and self._live_handle is not None \
+                and not self._live_handle.done():
+            raise RuntimeError(
+                "overlapping checkpointed submissions on one executor "
+                "would corrupt its checkpoint; use EmeraldRuntime.submit "
+                "or one executor per concurrent run")
+        rt = self._runtime
+        owned = rt is None
+        reap = None
+        if owned:
+            rt = EmeraldRuntime(
+                self.manager, policy=self.policy, cloud_tier=self.cloud_tier,
+                max_workers=self.max_workers,
+                local_workers=self.local_workers,
+                speculate_after=self.speculate_after, prefetch=self.prefetch,
+                name=f"emerald-{self.wf.name}")
 
-    # -------------------------------------------------------------- policies
-    def _should_offload(self, s: Step) -> bool:
-        return self._policy.should_offload(s)
-
-    # ------------------------------------------------------------- execution
-    def _run_local(self, s: Step):
-        rep = self.manager.execute(s, "local")
-        self._emit("local", s.name, "local", seconds=rep.seconds)
-
-    def _offload_with_recovery(self, s: Step):
-        tiers_to_try = [self.cloud_tier] * max(1, s.retries) + ["local"]
-        last_err = None
-        for attempt, tier in enumerate(tiers_to_try):
-            try:
-                rep = self._execute_maybe_speculative(s, tier)
-                self._emit("offload", s.name, rep.tier,
-                           seconds=rep.seconds, bytes_in=rep.bytes_in,
-                           bytes_out=rep.bytes_out, code_only=rep.code_only,
-                           attempt=attempt, remote=rep.remote,
-                           worker_pid=rep.worker_pid)
-                return rep
-            except StepFailure as e:      # node failure -> retry / fallback
-                last_err = e
-                self._emit("retry", s.name, tier, attempt=attempt,
-                           error=str(e))
-        raise WorkflowFailure(f"step {s.name} failed on all tiers: {last_err}")
-
-    def _execute_maybe_speculative(self, s: Step, tier: str):
-        alt = self._alternate_tier(tier)
-        est = self.manager.cost_model.stats_for(s.name).measured_s.get(tier)
-        if self.speculate_after is None or alt is None or est is None:
-            return self.manager.execute(s, tier)
-        timeout = est * self.speculate_after
-        # no context manager: pool shutdown must NOT join the straggler
-        spool = ThreadPoolExecutor(max_workers=2)
+            # tear the private runtime down when the run reaches ANY
+            # terminal state (result, failure, cancel) — a caller that
+            # never touches result() must not leak the driver + pools.
+            # The hook is installed by submit() before the run is
+            # enqueued, so even an instantly-finalizing run fires it.
+            # close() joins the driver and pools, so the hook runs it on
+            # a reaper thread, never on the finalizing thread itself.
+            def reap(_handle, _rt=rt):
+                threading.Thread(target=_rt.close, daemon=True,
+                                 name=f"emerald-{self.wf.name}-reap").start()
         try:
-            primary = spool.submit(self.manager.execute, s, tier)
-            done, _ = wait([primary], timeout=timeout)
-            if done:
-                return primary.result()
-            self._emit("speculate", s.name, alt, timeout=timeout)
-            backup = spool.submit(self.manager.execute, s, alt)
-            # first *successful* finisher wins: a primary that fails fast
-            # right after the backup launches must not fail the step
-            pending = {primary, backup}
-            last_err, fenced_rep = None, None
-            while pending:
-                done, pending = wait(pending, return_when=FIRST_COMPLETED)
-                for f in done:
-                    try:
-                        rep = f.result()
-                    except StepFailure as e:
-                        last_err = e
-                        continue
-                    if rep.fenced:
-                        # the loser's report (its publish was refused) —
-                        # keep only as a fallback so the recorded offload
-                        # event reflects the twin that actually published
-                        fenced_rep = rep
-                        continue
-                    return rep
-            if fenced_rep is not None:
-                return fenced_rep
-            raise last_err                   # both twins failed
-        finally:
-            spool.shutdown(wait=False)
-
-    def _alternate_tier(self, tier: str) -> Optional[str]:
-        for name in self.manager.tiers:
-            if name not in (tier, "local"):
-                return name
-        return None
+            handle = rt.submit(self.pwf, init_vars, policy=self.policy,
+                               fetch=fetch, resume=resume, weight=weight,
+                               priority=priority, namespace="",
+                               speculate_after=self.speculate_after,
+                               prefetch=self.prefetch,
+                               checkpointer=self, events=self.events,
+                               on_done=reap)
+        except BaseException:
+            # submission itself failed (e.g. a corrupt checkpoint raising
+            # in _load_checkpoint) — no run, no on_done hook, so close the
+            # just-created private runtime here instead of leaking it
+            if owned:
+                rt.close()
+            raise
+        if owned:
+            # result() additionally closes synchronously (idempotent) to
+            # preserve the old pools-shut-before-run-returns contract
+            handle._close_on_result = rt
+        self._live_handle = handle
+        return handle

@@ -18,8 +18,16 @@ URI-keyed, versioned, multi-tier data store:
   * ``put(..., expect_version=)`` is a write fence: the put is refused
     (returns ``None``) when the entry has moved past the expected
     version — how a speculation loser is kept from clobbering newer data,
-  * every cross-tier movement is accounted (bytes, modeled seconds) — the
-    MDSS benchmark and the §Perf analysis read these counters.
+  * every cross-tier movement is accounted (bytes, modeled seconds), per
+    namespace — the MDSS benchmark and the §Perf analysis read these
+    counters,
+  * **namespaces** (multi-tenant runtime): a URI ``ns/leaf`` belongs to
+    namespace ``ns``. ``namespaced(ns, shared=...)`` returns a per-run
+    view that writes under ``ns/`` but lets reads fall through to a
+    common ``shared/`` namespace, so N concurrent workflows get isolated
+    outputs while warm cross-run data (params, observations) is stored —
+    and stays cloud-resident — exactly once. ``drop_namespace`` is run
+    teardown: it frees every replica the run published.
 
 Values are arbitrary pytrees of arrays / scalars. A ``Transport`` performs
 the actual movement; the default in-process transport re-places arrays on
@@ -35,6 +43,17 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class MDSSTransferError(RuntimeError):
+    """A cross-tier transfer could not complete (e.g. a peer in-flight
+    copy never landed). Maps to ``StepFailure`` at staging time so the
+    executor's retry / tier-fallback path owns recovery."""
+
+
+def namespace_of(uri: str) -> str:
+    """Namespace component of a URI ('' for un-namespaced URIs)."""
+    return uri.split("/", 1)[0] if "/" in uri else ""
 
 
 def nbytes_of(value) -> int:
@@ -76,6 +95,11 @@ class MDSS:
         self.transport = transport or Transport(tiers)
         self.cost_model = cost_model
         self._entries: Dict[str, _Entry] = {}
+        # bumped by drop_namespace: fence tokens carry the epoch, so a
+        # draining step's post-drop write-back is refused instead of
+        # resurrecting the namespace (while a deliberate reuse of the
+        # name by a NEW submission snapshots the new epoch and proceeds)
+        self._ns_epoch: Dict[str, int] = {}
         self._lock = threading.RLock()
         # one wire flight per (uri, tier): racing ensures wait, not re-ship
         self._inflight: Dict[Tuple[str, str], threading.Event] = {}
@@ -83,8 +107,17 @@ class MDSS:
         # prefetch threads, new requests are dropped (ensure still staged
         # synchronously at execution time, so only overlap is lost)
         self._prefetch_slots = threading.BoundedSemaphore(4)
-        # accounting
+        # a peer in-flight transfer that never lands must not hang the
+        # waiter forever: after max_transfer_waits expired waits the
+        # ensure raises MDSSTransferError instead of retrying
+        self.transfer_wait_s: float = 300.0
+        self.max_transfer_waits: int = 3
+        # accounting (sync_events is a bounded recent-transfer log — the
+        # cumulative counters below carry the totals; a long-lived
+        # multi-tenant store must not grow a per-transfer list forever)
+        self.sync_events_cap = 4096
         self.bytes_moved: Dict[Tuple[str, str], int] = {}
+        self.ns_bytes_moved: Dict[str, int] = {}     # per-namespace wire bytes
         self.modeled_seconds: float = 0.0
         self.sync_events: list = []
         self.prefetch_ops: int = 0
@@ -119,14 +152,17 @@ class MDSS:
         With ``expect_versions`` the whole batch is fenced **all-or-
         nothing**: if any entry moved past its expected version, nothing
         is written and ``None`` is returned — two speculation twins can
-        never interleave a mixed set of a step's outputs.
+        never interleave a mixed set of a step's outputs. An absent entry
+        counts as version 0: expecting a nonzero version of a URI that
+        (no longer) exists is a stale expectation and fences the batch —
+        e.g. the entry was dropped with its namespace mid-execution.
         """
         with self._lock:
             if expect_versions is not None:
                 for uri in values:
                     e = self._entries.get(uri)
-                    if e is not None and e.version != expect_versions.get(
-                            uri, 0):
+                    cur = 0 if e is None else e.version
+                    if cur != expect_versions.get(uri, 0):
                         self.fenced_puts += 1
                         return None
             return {uri: self.put(uri, val, tier)
@@ -194,6 +230,7 @@ class MDSS:
 
     def _ensure_one(self, uri: str, tier: str) -> int:
         moved = 0
+        expired_waits = 0
         while True:
             peer = None
             with self._lock:
@@ -213,8 +250,19 @@ class MDSS:
                     self._inflight[(uri, tier)] = flight
             if peer is not None:
                 # someone (e.g. a prefetch) is already shipping this copy:
-                # wait for that flight instead of moving the bytes twice
-                peer.wait(timeout=300.0)
+                # wait for that flight instead of moving the bytes twice.
+                # A flight that never lands (wedged transport, dead
+                # prefetch thread) must not hang us forever: after
+                # max_transfer_waits expired waits, surface a transfer
+                # error — _stage_inputs maps it to StepFailure, so the
+                # executor's retry/fallback path owns recovery.
+                if not peer.wait(timeout=self.transfer_wait_s):
+                    expired_waits += 1
+                    if expired_waits >= self.max_transfer_waits:
+                        raise MDSSTransferError(
+                            f"{uri}: in-flight transfer to {tier} did not "
+                            f"complete within {expired_waits} x "
+                            f"{self.transfer_wait_s}s waits")
                 continue
             try:
                 # wire movement with no lock held
@@ -228,8 +276,11 @@ class MDSS:
                     if cur is None or cur[0] < snap_version:
                         e.copies[tier] = (snap_version, shipped)
                         moved += n
-                        self._account(src, tier, n)
+                        self._account(uri, src, tier, n)
                         self.sync_events.append((uri, src, tier, n))
+                        if len(self.sync_events) > self.sync_events_cap:
+                            del self.sync_events[
+                                :len(self.sync_events) - self.sync_events_cap]
                     if self.has_latest(uri, tier):
                         return moved
             finally:
@@ -297,11 +348,60 @@ class MDSS:
                 best, best_v = t, v
         return best if best_v == e.version else None
 
-    def _account(self, src: str, dst: str, n: int):
+    def _account(self, uri: str, src: str, dst: str, n: int):
         key = (src, dst)
         self.bytes_moved[key] = self.bytes_moved.get(key, 0) + n
+        ns = namespace_of(uri)
+        self.ns_bytes_moved[ns] = self.ns_bytes_moved.get(ns, 0) + n
         if self.cost_model is not None:
             self.modeled_seconds += self.cost_model.transfer_time(n, src, dst)
+
+    # ----------------------------------------------------------- namespaces
+    def namespaced(self, ns: str, shared: Optional[str] = None
+                   ) -> "NamespacedMDSS":
+        """A per-run view: writes land under ``ns/``, reads of URIs absent
+        from ``ns`` fall through to the ``shared`` namespace."""
+        return NamespacedMDSS(self, ns, shared=shared)
+
+    def namespace_entries(self, ns: str):
+        """URIs currently stored under namespace ``ns``."""
+        prefix = ns + "/"
+        with self._lock:
+            return [u for u in self._entries if u.startswith(prefix)]
+
+    def namespace_bytes(self, ns: str) -> int:
+        """Wire bytes moved so far on behalf of namespace ``ns``."""
+        with self._lock:
+            return self.ns_bytes_moved.get(ns, 0)
+
+    def namespace_resident_bytes(self, ns: str) -> int:
+        """Bytes currently resident (all replicas) under namespace ``ns``."""
+        prefix = ns + "/"
+        with self._lock:
+            return sum(nbytes_of(val)
+                       for u, e in self._entries.items() if u.startswith(prefix)
+                       for _, val in e.copies.values())
+
+    def drop_namespace(self, ns: str) -> Tuple[int, int]:
+        """Run teardown: delete every entry under ``ns/``.
+
+        Returns ``(entries_dropped, resident_bytes_freed)``. In-flight
+        work targeting dropped URIs finishes harmlessly: the transfer
+        install step re-checks the entry under the lock (a missing entry
+        surfaces as KeyError to the best-effort shipper), and a draining
+        step's fenced write-back is refused because its fence tokens
+        carry the pre-drop namespace epoch — neither resurrects the data.
+        """
+        prefix = ns + "/"
+        with self._lock:
+            doomed = [u for u in self._entries if u.startswith(prefix)]
+            freed = sum(nbytes_of(val)
+                        for u in doomed
+                        for _, val in self._entries[u].copies.values())
+            for u in doomed:
+                del self._entries[u]
+            self._ns_epoch[ns] = self._ns_epoch.get(ns, 0) + 1
+        return len(doomed), freed
 
     # ------------------------------------------------------------ reporting
     def total_bytes_moved(self) -> int:
@@ -309,8 +409,153 @@ class MDSS:
 
     def reset_accounting(self):
         self.bytes_moved.clear()
+        self.ns_bytes_moved.clear()
         self.modeled_seconds = 0.0
         self.sync_events.clear()
         self.prefetch_ops = 0
         self.prefetch_bytes = 0
         self.fenced_puts = 0
+
+
+class NamespacedMDSS:
+    """Per-run MDSS view (multi-tenant isolation with shared warm data).
+
+    Implements the executor/manager-facing MDSS surface over a base store:
+
+      * writes (``put``/``put_many``) always land under ``ns/uri`` — a run
+        can never clobber another run's (or the shared namespace's) data,
+      * reads (``get``/``ensure``/``version``/...) resolve ``uri`` to
+        ``ns/uri`` when the run has written it, else fall through to
+        ``shared/uri`` when a shared namespace is configured and holds the
+        URI — cross-run warm data (params, observations) is stored and
+        kept cloud-resident exactly once,
+      * write fences (``expect_version``) compare against the *resolved*
+        read version, so a fence snapshotted against a shared-namespace
+        entry still means "nothing newer was published" when the fenced
+        write creates the run's first private copy of the URI.
+
+    Resolution is decided per call; dataflow (WAR/WAW) edges inside a run
+    serialise its readers against its writers, and other runs never write
+    this namespace, so a read resolved to ``shared`` cannot race a private
+    overwrite it should have seen.
+    """
+
+    def __init__(self, base: MDSS, ns: str, shared: Optional[str] = None):
+        assert "/" not in ns, f"namespace may not contain '/': {ns!r}"
+        self.base = base
+        self.ns = ns
+        self.shared = shared if shared != ns else None
+
+    # ------------------------------------------------------- key resolution
+    def _wkey(self, uri: str) -> str:
+        return f"{self.ns}/{uri}"
+
+    def _rkey(self, uri: str) -> str:
+        wk = f"{self.ns}/{uri}"
+        if self.shared is None:
+            return wk
+        with self.base._lock:
+            if wk in self.base._entries:
+                return wk
+            sk = f"{self.shared}/{uri}"
+            if sk in self.base._entries:
+                return sk
+        return wk
+
+    # ------------------------------------------------------------------ api
+    def put(self, uri: str, value, tier: str = "local",
+            expect_version: Optional[int] = None):
+        if expect_version is None:
+            return self.base.put(self._wkey(uri), value, tier)
+        with self.base._lock:
+            if self.version(uri) != expect_version:
+                self.base.fenced_puts += 1
+                return None
+            return self.base.put(self._wkey(uri), value, tier)
+
+    def fence_tokens(self, uris) -> Dict[str, Tuple[str, int, int]]:
+        """Snapshot (resolved key, version, namespace epoch) per URI for
+        a later fenced ``put_many``. Tokens carry the *resolution* — a
+        bare version number is ambiguous across the shared/private
+        boundary (shared/u at v1 and a later private run/u at v1 compare
+        equal), which would let a speculation loser's late publish slip
+        past the fence — and the namespace *epoch*, so a draining step's
+        write-back after ``drop_namespace`` is refused rather than
+        resurrecting the dropped data."""
+        with self.base._lock:
+            epoch = self.base._ns_epoch.get(self.ns, 0)
+            return {u: (self._rkey(u), self.base.version(self._rkey(u)),
+                        epoch)
+                    for u in uris}
+
+    def put_many(self, values: Dict[str, Any], tier: str = "local",
+                 expect_versions: Optional[Dict] = None):
+        """Fenced batch publish. ``expect_versions`` values may be plain
+        ints (compat: compared against the resolved read version) or
+        :meth:`fence_tokens` tuples (compared against resolution, version
+        AND namespace epoch — required for correctness under shared-read
+        fallback and namespace teardown)."""
+        with self.base._lock:
+            if expect_versions is not None:
+                for uri in values:
+                    exp = expect_versions.get(uri, 0)
+                    if isinstance(exp, tuple):
+                        rkey, ver = exp[0], exp[1]
+                        cur = self._rkey(uri)
+                        stale = (cur != rkey
+                                 or self.base.version(cur) != ver
+                                 or (len(exp) > 2 and exp[2] !=
+                                     self.base._ns_epoch.get(self.ns, 0)))
+                    else:
+                        stale = self.version(uri) != exp
+                    if stale:
+                        self.base.fenced_puts += 1
+                        return None
+            return {uri: self.base.put(self._wkey(uri), val, tier)
+                    for uri, val in values.items()}
+
+    def version(self, uri: str) -> int:
+        return self.base.version(self._rkey(uri))
+
+    def peek_latest(self, uri: str):
+        return self.base.peek_latest(self._rkey(uri))
+
+    def has_latest(self, uri: str, tier: str) -> bool:
+        return self.base.has_latest(self._rkey(uri), tier)
+
+    def stale_bytes(self, uris, tier: str) -> int:
+        return self.base.stale_bytes([self._rkey(u) for u in uris], tier)
+
+    def get(self, uri: str, tier: str = "local"):
+        return self.base.get(self._rkey(uri), tier)
+
+    def ensure(self, uris, tier: str) -> int:
+        return self.base.ensure([self._rkey(u) for u in uris], tier)
+
+    def prefetch(self, uris, tier: str) -> Optional[Future]:
+        return self.base.prefetch([self._rkey(u) for u in uris], tier)
+
+    def synchronize(self, uri: Optional[str] = None, tiers=None):
+        return self.base.synchronize(
+            self._rkey(uri) if uri is not None else None, tiers)
+
+    def resolves_shared(self, uri: str) -> bool:
+        """True when a read of ``uri`` currently falls through to the
+        shared namespace (the run holds no private copy)."""
+        return self.shared is not None and \
+            self._rkey(uri).startswith(self.shared + "/")
+
+    # ----------------------------------------------------------- accounting
+    def bytes_moved_here(self) -> int:
+        return self.base.namespace_bytes(self.ns)
+
+    def drop(self) -> Tuple[int, int]:
+        return self.base.drop_namespace(self.ns)
+
+    @property
+    def tiers(self):
+        return self.base.tiers
+
+    @property
+    def cost_model(self):
+        return self.base.cost_model

@@ -15,9 +15,21 @@ Life-cycle for a remotable step *i* (paper's wording in quotes):
 
 Execution statistics (wall time, XLA cost analysis at first compile) feed
 the cost model for the beyond-paper scheduling policy.
+
+Multi-tenancy: one manager serves every run of a shared runtime. The
+compile cache is keyed by (step name, tier, *code fingerprint*) so the
+second submission of the same workflow — same step code, typically a new
+``Workflow`` object — reuses the compiled executable (code-only repeat
+offloads) while two tenants that happen to share a step *name* with
+different code never collide. Cost-model stats stay keyed by step name
+(the paper's granularity) and likewise survive across runs, so a repeat
+submission is pre-measured from the first one. ``execute`` accepts a
+per-run ``mdss`` view (namespace isolation) and a ``priority`` class that
+rides down to the fabric broker.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
@@ -32,6 +44,35 @@ from repro.core.workflow import Step
 
 class StepFailure(RuntimeError):
     pass
+
+
+def step_code_key(step: Step):
+    """Stable identity of a step's *code* (not its enclosing workflow).
+
+    Registry steps are identified by registry name; closure/default-free
+    plain fns by (code object, globals identity) — CPython compares code
+    objects by VALUE (bytecode, consts, names, location), so rebuilding
+    an identical workflow in the same module for a second submission
+    still hits the compile cache, while a same-named tenant step with
+    different code (even two ``exec``'d bodies sharing ``<string>:1``)
+    gets its own entry. Globals identity matters because equal code can
+    read *different* module globals (``return x * SCALE`` under two
+    modules); identical-looking fns from different global environments
+    are therefore a safe miss, never a shared hit. Functions that carry
+    per-object state (closures, bound methods, default args, non-plain
+    callables) key by object identity outright."""
+    if step.remote_impl:
+        return ("registry", step.remote_impl)
+    fn = step.fn
+    code = getattr(fn, "__code__", None)
+    stateless = (code is not None
+                 and getattr(fn, "__closure__", None) is None
+                 and getattr(fn, "__self__", None) is None
+                 and not getattr(fn, "__defaults__", None)
+                 and not getattr(fn, "__kwdefaults__", None))
+    if stateless:
+        return ("code", code, id(getattr(fn, "__globals__", None)))
+    return ("id", id(fn))
 
 
 @dataclass
@@ -57,14 +98,27 @@ class MigrationManager:
         self.mdss = mdss
         self.cost_model = cost_model or CostModel(tiers)
         self.remote_timeout_s = remote_timeout_s
-        self._compile_cache: Dict[Tuple[str, str], Any] = {}
+        # LRU-bounded: a long-lived runtime sees unboundedly many step
+        # objects (fresh closures per tenant submission key by id), and a
+        # cache entry pins its fn plus captured state — cap, don't grow
+        self._compile_cache: Dict[Tuple, Any] = {}
+        self._cache_lock = threading.Lock()
+        self.compile_cache_cap = 1024
+        self.compile_cache_hits = 0
+        # bounded like the compile cache: one manager serves a long-lived
+        # runtime, and an unbounded per-step report log would grow forever
+        self.reports_cap = 4096
         self.reports: list[OffloadReport] = []
 
     # ----------------------------------------------------------- executable
     def _executable(self, step: Step, tier_name: str):
-        key = (step.name, tier_name)
-        if key in self._compile_cache:
-            return self._compile_cache[key]
+        key = (step.name, tier_name, step_code_key(step))
+        with self._cache_lock:
+            cached = self._compile_cache.pop(key, None)
+            if cached is not None:
+                self._compile_cache[key] = cached    # LRU refresh
+                self.compile_cache_hits += 1
+                return cached
         fn = step.fn
         registry_fn = False
         if fn is None and step.remote_impl:
@@ -79,7 +133,10 @@ class MigrationManager:
             # registry fns are numpy-land by contract — never jit them,
             # whatever jax_step defaults to
             fn = jax.jit(fn)
-        self._compile_cache[key] = fn
+        with self._cache_lock:
+            self._compile_cache[key] = fn
+            while len(self._compile_cache) > self.compile_cache_cap:
+                self._compile_cache.pop(next(iter(self._compile_cache)))
         return fn
 
     def _capture_cost(self, step: Step, fn, kwargs):
@@ -95,7 +152,8 @@ class MigrationManager:
             pass
 
     # -------------------------------------------------------------- execute
-    def execute(self, step: Step, tier_name: str) -> OffloadReport:
+    def execute(self, step: Step, tier_name: str, *, mdss=None,
+                priority: int = 0) -> OffloadReport:
         """Run ``step`` on ``tier_name``; inputs/outputs through MDSS.
 
         When the tier is fabric-backed (``tier.worker_pool``) and the step
@@ -104,19 +162,30 @@ class MigrationManager:
         bytes that crossed the wire; otherwise it runs in-process exactly
         as the seed did (jax steps always do — their point is mesh-placed
         execution, not process separation).
+
+        ``mdss`` selects the data view — a run's :class:`NamespacedMDSS`
+        under the multi-tenant runtime, the shared base store otherwise.
+        ``priority`` is the fabric dispatch class: the broker serves
+        higher classes first, so an interactive run's tasks overtake a
+        batch run's queued work.
         """
+        mdss = self.mdss if mdss is None else mdss
         tier = self.tiers[tier_name]
         uris = list(step.inputs)
-        stale = self.mdss.stale_bytes(uris, tier_name)
+        stale = mdss.stale_bytes(uris, tier_name)
         # snapshot output versions: the write-back below is fenced on them,
         # so a slow duplicate (speculation loser) can't clobber data a
-        # faster twin or a downstream step has already published
-        out_versions = {k: self.mdss.version(k) for k in step.outputs}
-        bytes_in, kwargs = self._stage_inputs(step, tier_name, uris)
+        # faster twin or a downstream step has already published. A
+        # namespaced view supplies (resolved key, version) tokens — a bare
+        # number is ambiguous across its shared/private read boundary
+        fence = getattr(mdss, "fence_tokens", None)
+        out_versions = fence(step.outputs) if fence is not None else \
+            {k: mdss.version(k) for k in step.outputs}
+        bytes_in, kwargs = self._stage_inputs(step, tier_name, uris, mdss)
         fabric = getattr(tier, "worker_pool", None)
         if fabric is not None and fabric.can_run(step):
             out, dt, wire_in, wire_out, pid = self._execute_remote(
-                step, fabric, kwargs)
+                step, fabric, kwargs, priority)
             # report the worker's actual wire ingress; the MDSS staging
             # bytes remain visible in mdss.bytes_moved
             bytes_in = wire_in
@@ -141,7 +210,7 @@ class MigrationManager:
             raise StepFailure(f"step {step.name} missing outputs {missing}")
         # all-or-nothing fenced publish: twins can never interleave a
         # mixed set of one step's outputs
-        published = self.mdss.put_many(
+        published = mdss.put_many(
             {k: out[k] for k in step.outputs}, tier=tier_name,
             expect_versions=out_versions)
         fenced = published is None
@@ -158,30 +227,35 @@ class MigrationManager:
                             remote=remote, worker_pid=worker_pid,
                             fenced=fenced)
         self.reports.append(rep)
+        if len(self.reports) > self.reports_cap:
+            del self.reports[:len(self.reports) - self.reports_cap]
         return rep
 
-    def _stage_inputs(self, step: Step, tier_name: str, uris):
+    def _stage_inputs(self, step: Step, tier_name: str, uris, mdss):
         """MDSS ensure + get with fabric faults (a worker dying while the
-        transport ships a stale input) mapped to StepFailure, so staging
-        errors go through the executor's retry path like execution errors."""
+        transport ships a stale input), stuck in-flight transfers
+        (``MDSSTransferError``) and vanished entries (``KeyError`` from a
+        namespace dropped mid-run) mapped to StepFailure, so staging
+        errors go through the executor's retry path like execution
+        errors."""
         from concurrent.futures import TimeoutError as _FutTimeout
         try:
-            bytes_in = self.mdss.ensure(uris, tier_name)
-            return bytes_in, {u: self.mdss.get(u, tier_name) for u in uris}
+            bytes_in = mdss.ensure(uris, tier_name)
+            return bytes_in, {u: mdss.get(u, tier_name) for u in uris}
         except StepFailure:
             raise
-        except (RuntimeError, _FutTimeout, TimeoutError) as e:
+        except (RuntimeError, LookupError, _FutTimeout, TimeoutError) as e:
             raise StepFailure(
                 f"step {step.name}: staging inputs on {tier_name} failed: "
-                f"{e}") from e
+                f"{e!r}") from e
 
-    def _execute_remote(self, step: Step, fabric, kwargs):
+    def _execute_remote(self, step: Step, fabric, kwargs, priority: int = 0):
         """Dispatch through the fabric broker; fabric faults surface as
         StepFailure so the executor's retry / tier-fallback logic applies."""
         from concurrent.futures import TimeoutError as _FutTimeout
         from repro.cloud.broker import FabricError
         try:
-            task = fabric.submit_step(step, kwargs)
+            task = fabric.submit_step(step, kwargs, priority=priority)
             out = task.result(self.remote_timeout_s)
         except FabricError as e:
             raise StepFailure(f"fabric: {e}") from e

@@ -1,0 +1,824 @@
+"""EmeraldRuntime — one long-lived scheduler serving many workflows.
+
+The paper's Emerald offloads the steps of *one* workflow at a time; a
+service absorbing heavy traffic must amortise the expensive parts — the
+worker pool, warm compile caches, cloud-resident data — across
+submissions instead of rebuilding them per run. The runtime is that
+amortisation layer:
+
+  * **one driver event loop** reacts to submissions and step completions
+    for N concurrent workflows (a multi-run dispatcher keyed by run id),
+  * **one offload/local lane pair** (thread pools sized once) is shared:
+    idle lanes of one run absorb ready work from another, which is where
+    the aggregate-throughput win over back-to-back ``run()`` calls comes
+    from (inter-workflow parallelism),
+  * **one MigrationManager** carries the compile cache and cost-model
+    statistics across runs — the second submission of the same step is
+    code-only and pre-measured,
+  * **one MDSS** holds every run's data under a per-run namespace
+    (``run_id/uri``), with shared-read of a common namespace for warm
+    cross-run data (``publish``); ``RunHandle.release()`` drops a run's
+    namespace at teardown,
+  * **cross-run fair share** composes with the per-run critical-path
+    priority: each free lane slot goes to the run with the smallest
+    deficit-weighted share (``FairShare``), then that run's highest-cpl
+    ready step dispatches — one wide workflow cannot starve the rest,
+    and ``weight``/``priority`` let an interactive run overtake batch.
+
+API::
+
+    rt = EmeraldRuntime(manager)              # or EmeraldRuntime() to own one
+    h1 = rt.submit(wf_a, {"x": xa})           # non-blocking
+    h2 = rt.submit(wf_b, {"x": xb}, weight=2.0, priority=1)
+    out = h1.result(); h2.cancel(); rt.close()
+
+``EmeraldExecutor`` (core/executor.py) is now a thin compat shim over a
+private runtime, so the single-workflow API and its semantics (events,
+checkpoints, retries, speculation) are unchanged.
+
+Per-run recovery semantics are inherited wholesale from the event-driven
+executor: retry with tier fallback, straggler speculation with
+version-fenced losers, incremental per-completion checkpoints, and
+failure draining in-flight siblings before the run's handle fails —
+without disturbing the other runs.
+
+Known tradeoff: checkpoint *writes* happen on the driver thread (the
+durability-first choice the executor made); a run that checkpoints large
+state briefly delays other runs' dispatch. Cache snapshots stay O(changed
+vars); move the pickle off-thread if this shows up in profiles.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import os
+import pickle
+import queue
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.mdss import MDSS
+from repro.core.migration import MigrationManager, StepFailure
+from repro.core.partitioner import PartitionedWorkflow, partition
+from repro.core.scheduler import FairShare, critical_path_lengths, make_policy
+from repro.core.tiers import default_tiers
+from repro.core.workflow import Step, Workflow
+
+
+@dataclass
+class Event:
+    kind: str          # suspend | offload | resume | local | retry |
+                       # speculate | prefetch | checkpoint
+    step: str
+    tier: str = ""
+    t: float = 0.0
+    info: dict = field(default_factory=dict)
+
+
+class WorkflowFailure(RuntimeError):
+    pass
+
+
+class RunCancelled(RuntimeError):
+    """The run was cancelled before completing."""
+
+
+class RuntimeClosed(RuntimeError):
+    """The runtime shut down before the run completed."""
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+class RunCheckpointer:
+    """Per-run incremental checkpoint state (cache + pickle snapshots).
+
+    ``EmeraldExecutor`` inherits these methods unchanged; the runtime
+    creates one per submission when it owns checkpointing. The cache is
+    fed ONLY from init/resume vars and the outputs of harvested
+    completions — a checkpoint can never capture the published outputs of
+    a step that is still in flight (which resume would then double-apply
+    on a non-idempotent step).
+    """
+
+    def __init__(self, mdss, wf: Workflow, checkpoint_dir: Optional[str],
+                 ckpt_name: Optional[str] = None):
+        self.mdss = mdss
+        self.wf = wf
+        self.checkpoint_dir = checkpoint_dir
+        self.ckpt_name = ckpt_name or wf.name
+        # uri -> (version, host snapshot)
+        self._ckpt_cache: Dict[str, tuple] = {}
+
+    def _emit(self, kind, step, tier="", **info):   # rebound by the runtime
+        pass
+
+    def _ckpt_path(self):
+        return os.path.join(self.checkpoint_dir, f"{self.ckpt_name}.wfckpt")
+
+    def _cache_var(self, uri: str):
+        """Snapshot ``uri``'s freshest value into the checkpoint cache
+        (skip if the cached version is already current). Uses a reference
+        read (``peek_latest``) — no cross-tier transfer lands on the
+        driver thread for checkpointing."""
+        val, ver = self.mdss.peek_latest(uri)
+        if ver and self._ckpt_cache.get(uri, (0, None))[0] != ver:
+            self._ckpt_cache[uri] = (ver, jax.tree.map(np.asarray, val))
+
+    def _cache_outputs(self, harvested: Step):
+        """Snapshot a harvested step's outputs into the checkpoint cache.
+
+        Must run BEFORE the step's successors dispatch: the outputs are
+        final right now (WAW/WAR edges keep any later writer blocked until
+        this harvest), so the reference read snapshots exactly what was
+        published — no transfer involved. The pickle write itself
+        (``_save_checkpoint``) has no ordering constraint and runs after
+        dispatch, off the critical path.
+        """
+        if self.checkpoint_dir:
+            for uri in harvested.outputs:
+                self._cache_var(uri)
+
+    def _save_checkpoint(self, completed):
+        if not self.checkpoint_dir:
+            return
+        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        snapshot = {uri: val for uri, (_, val) in self._ckpt_cache.items()}
+        tmp = self._ckpt_path() + ".tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump({"completed": sorted(completed), "vars": snapshot}, f)
+        os.replace(tmp, self._ckpt_path())
+        self._emit("checkpoint", "<workflow>", n=len(completed))
+
+    def _load_checkpoint(self):
+        if not self.checkpoint_dir or not os.path.exists(self._ckpt_path()):
+            return None
+        with open(self._ckpt_path(), "rb") as f:
+            return pickle.load(f)
+
+
+# --------------------------------------------------------------------------
+# run handle
+# --------------------------------------------------------------------------
+class RunHandle:
+    """Client-side view of one submitted workflow run."""
+
+    def __init__(self, run_id: str, namespace: str, runtime: "EmeraldRuntime",
+                 events: List[Event]):
+        self.run_id = run_id
+        self.namespace = namespace
+        self.events = events
+        self._runtime = runtime
+        self._done = threading.Event()
+        self._result: Optional[dict] = None
+        self._error: Optional[BaseException] = None
+        # set (at most once, BEFORE the run is enqueued) by the runtime:
+        # fires on any terminal state — result, failure, cancel
+        self._on_done = None
+        # a private runtime to close synchronously inside result() (the
+        # compat shim's pools-shut-before-run-returns contract); wait()/
+        # state users fall back to the _on_done reaper
+        self._close_on_result: Optional["EmeraldRuntime"] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._done.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> dict:
+        """Block for the run's re-integrated variables (or its failure)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"run {self.run_id} still executing")
+        if self._close_on_result is not None:
+            self._close_on_result.close()       # idempotent
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def cancel(self):
+        """Request cancellation: queued steps are abandoned, in-flight
+        steps drain, then ``result`` raises :class:`RunCancelled`."""
+        self._runtime._inbox.put(("cancel", self.run_id))
+
+    def release(self):
+        """Drop this run's MDSS namespace (teardown of its data).
+
+        Returns ``(entries_dropped, resident_bytes_freed)``; a no-op for
+        un-namespaced (compat shim) runs."""
+        if not self.namespace:
+            return (0, 0)
+        return self._runtime.mdss.drop_namespace(self.namespace)
+
+    @property
+    def state(self) -> str:
+        if not self._done.is_set():
+            return "running"
+        if isinstance(self._error, RunCancelled):
+            return "cancelled"
+        return "failed" if self._error is not None else "done"
+
+    def _finish(self, result=None, error=None):
+        self._result = result
+        self._error = error
+        self._done.set()
+        if self._on_done is not None:
+            try:
+                self._on_done(self)
+            except Exception:
+                pass   # a teardown hook must never poison the finalizer
+
+
+# --------------------------------------------------------------------------
+# internal per-run state
+# --------------------------------------------------------------------------
+@dataclass
+class _Run:
+    run_id: str
+    ns: str
+    handle: RunHandle
+    wf: Workflow
+    steps: Dict[str, Step]
+    succs: Dict[str, set]
+    indeg: Dict[str, int]
+    order_idx: Dict[str, int]
+    completed: set
+    mdss: Any                       # NamespacedMDSS or base MDSS
+    policy: Any
+    fetch: Any
+    checkpointer: Optional[RunCheckpointer]
+    weight: float
+    priority: int
+    speculate_after: Optional[float]
+    prefetch: bool
+    events: List[Event]
+    lock: threading.Lock = field(default_factory=threading.Lock)
+    ready: Dict[bool, list] = field(
+        default_factory=lambda: {True: [], False: []})   # keyed by offloaded?
+    inflight: int = 0
+    failures: List[BaseException] = field(default_factory=list)
+    cancelled: bool = False
+    ckpt_dirty: bool = False
+
+    def emit(self, kind, step, tier="", **info):
+        with self.lock:
+            self.events.append(Event(kind, step, tier, time.perf_counter(),
+                                     info))
+
+
+_AUTO = object()
+
+
+# --------------------------------------------------------------------------
+# the runtime
+# --------------------------------------------------------------------------
+class EmeraldRuntime:
+    """Long-lived multi-tenant scheduler over one shared fabric + MDSS."""
+
+    def __init__(self, manager: Optional[MigrationManager] = None, *,
+                 tiers=None, policy: str = "annotate",
+                 cloud_tier: str = "cloud", max_workers: int = 8,
+                 local_workers: int = 4,
+                 speculate_after: Optional[float] = None,
+                 checkpoint_dir: Optional[str] = None, prefetch: bool = True,
+                 shared_namespace: str = "shared", name: str = "emerald"):
+        if manager is None:
+            tiers = tiers or default_tiers()
+            cm = CostModel(tiers)
+            manager = MigrationManager(tiers, MDSS(tiers, cost_model=cm), cm)
+        assert policy in ("annotate", "cost_model", "never")
+        self.manager = manager
+        self.mdss = manager.mdss                 # the shared base store
+        self.default_policy = policy
+        self.cloud_tier = cloud_tier
+        self.max_workers = max_workers
+        self.local_workers = local_workers
+        self.speculate_after = speculate_after
+        self.checkpoint_dir = checkpoint_dir
+        self.prefetch = prefetch
+        self.shared_namespace = shared_namespace
+        self.name = name
+
+        self._fair = FairShare()
+        self._inbox: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._runs: Dict[str, _Run] = {}
+        self._runs_lock = threading.Lock()       # _runs snapshot for stats
+        self._busy = {True: 0, False: 0}         # keyed by offloaded?
+        self._slots = {True: max_workers, False: local_workers}
+        self._counter = itertools.count(1)
+        self._closed = False
+        self._close_lock = threading.Lock()
+        self._close_done = threading.Event()
+        self._draining = False
+        self.runs_completed = 0
+
+        self._offload_pool = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix=f"{name}-offload")
+        self._local_pool = ThreadPoolExecutor(
+            max_workers=local_workers, thread_name_prefix=f"{name}-local")
+        # re-integration fetches run here so a slow cloud->local sync
+        # never stalls the driver (and with it every other run's dispatch)
+        self._misc_pool = ThreadPoolExecutor(
+            max_workers=2, thread_name_prefix=f"{name}-finalize")
+        self._driver = threading.Thread(target=self._drive, daemon=True,
+                                        name=f"{name}-driver")
+        self._driver.start()
+
+    # ------------------------------------------------------------------ api
+    def submit(self, workflow, init_vars: Optional[Dict[str, Any]] = None, *,
+               policy: Optional[str] = None, fetch=None, resume: bool = False,
+               weight: float = 1.0, priority: int = 0,
+               namespace: Optional[str] = None,
+               speculate_after=_AUTO, prefetch: Optional[bool] = None,
+               checkpointer: Optional[RunCheckpointer] = None,
+               events: Optional[List[Event]] = None,
+               on_done=None) -> RunHandle:
+        """Enqueue a workflow for concurrent execution (non-blocking).
+
+        ``workflow`` may be a :class:`Workflow` (partitioned here) or an
+        already-partitioned :class:`PartitionedWorkflow`. ``namespace``
+        defaults to a fresh ``runN`` namespace (pass an explicit one to
+        resubmit into warm per-run data, or ``""`` to address the base
+        store un-namespaced — the compat shim's mode). ``weight`` is the
+        fair-share knob (2.0 = twice the lane share under contention);
+        ``priority`` is the fabric dispatch class (higher overtakes lower
+        in the broker queue). Returns a :class:`RunHandle`.
+        """
+        if self._closed:
+            raise RuntimeClosed("runtime is closed")
+        if resume and namespace is None:
+            # a fresh auto namespace has no prior state OR checkpoint to
+            # resume from — silently re-running the whole DAG (including
+            # non-idempotent completed steps) is the failure checkpoints
+            # exist to prevent, so demand the original namespace
+            raise ValueError(
+                "resume=True needs the namespace of the run being resumed "
+                "(auto namespaces are fresh per submission)")
+        pwf = workflow if isinstance(workflow, PartitionedWorkflow) \
+            else partition(workflow)
+        wf = pwf.workflow
+        n = next(self._counter)
+        run_id = f"{wf.name}#{n}"
+        ns = f"run{n}" if namespace is None else namespace
+        mdss = self.mdss if ns == "" else self.mdss.namespaced(
+            ns, shared=self.shared_namespace)
+
+        completed: set = set()
+        for uri, val in (init_vars or {}).items():
+            if uri not in wf.variables:
+                wf.var(uri)
+            mdss.put(uri, val, tier="local")
+        if checkpointer is None and self.checkpoint_dir:
+            checkpointer = RunCheckpointer(
+                mdss, wf, self.checkpoint_dir,
+                ckpt_name=f"{ns}.{wf.name}" if ns else wf.name)
+        if resume and checkpointer is not None:
+            state = checkpointer._load_checkpoint()
+            if state is not None:
+                completed = set(state["completed"])
+                for uri, val in state["vars"].items():
+                    mdss.put(uri, val, tier="local")
+        if checkpointer is not None and checkpointer.checkpoint_dir:
+            # seed from EVERY resident variable (init/resume vars and state
+            # carried over from previous runs in this namespace): nothing
+            # is in flight yet, so everything resident is completed work.
+            # Variables currently resolving to the SHARED namespace are
+            # not this run's state and are skipped — checkpointing them
+            # would make resume write private (stale, re-staged) copies
+            # of data meant to be stored once and read live.
+            for uri in wf.variables:
+                if not mdss.version(uri):
+                    continue
+                if getattr(mdss, "resolves_shared", None) is not None \
+                        and mdss.resolves_shared(uri):
+                    continue
+                checkpointer._cache_var(uri)
+
+        steps = {s.name: s for s in wf.toplevel()}
+        completed &= set(steps)
+        deps = wf.dependencies()
+        succs = wf.successors(deps=deps)
+        indeg = wf.in_degrees(completed, deps=deps)
+        order_idx = {nm: i for i, nm in enumerate(wf.order)}
+        run_policy = make_policy(policy or self.default_policy,
+                                 self.manager.cost_model, mdss,
+                                 self.cloud_tier)
+        if hasattr(run_policy, "set_priorities"):
+            run_policy.set_priorities(critical_path_lengths(
+                wf, self.manager.cost_model, self.cloud_tier, succ=succs))
+
+        sink = events if events is not None else []
+        handle = RunHandle(run_id, ns, self, sink)
+        # installed before the run can possibly finalize — no TOCTOU
+        handle._on_done = on_done
+        run = _Run(run_id=run_id, ns=ns, handle=handle, wf=wf, steps=steps,
+                   succs=succs, indeg=indeg, order_idx=order_idx,
+                   completed=completed, mdss=mdss, policy=run_policy,
+                   fetch=fetch, checkpointer=checkpointer, weight=weight,
+                   priority=priority,
+                   speculate_after=self.speculate_after
+                   if speculate_after is _AUTO else speculate_after,
+                   prefetch=self.prefetch if prefetch is None else prefetch,
+                   events=sink)
+        if checkpointer is not None:
+            checkpointer._emit = run.emit
+        self._inbox.put(("submit", run))
+        # close() may have fully raced this submit (entry check passed,
+        # driver already exited): nobody will consume the message, so
+        # flush it ourselves — the handle resolves instead of hanging
+        if self._closed and not self._driver.is_alive():
+            self._flush_orphaned_inbox()
+        return handle
+
+    def publish(self, uri: str, value, tier: str = "local") -> int:
+        """Write warm cross-run data into the shared namespace: every
+        run's reads of ``uri`` fall through to this copy (until the run
+        writes its own), so it is stored — and stays cloud-resident —
+        exactly once across all tenants."""
+        return self.mdss.put(f"{self.shared_namespace}/{uri}", value,
+                             tier=tier)
+
+    def warm(self, uris, tier: Optional[str] = None) -> int:
+        """Pre-position shared-namespace ``uris`` on ``tier`` (default:
+        the cloud tier); returns bytes moved."""
+        tier = tier or self.cloud_tier
+        return self.mdss.ensure(
+            [f"{self.shared_namespace}/{u}" for u in uris], tier)
+
+    def attach_fabric(self, fabric, tier_names=("cloud",)):
+        """Back ``tier_names`` with an offload fabric, swap the MDSS
+        transport for its RPCTransport, and point the fabric autoscaler
+        (when present) at this runtime's aggregate ready backlog."""
+        from repro.cloud import attach
+        transport = attach(self.manager.tiers, fabric, tier_names,
+                           mdss=self.mdss,
+                           cost_model=self.manager.cost_model)
+        if getattr(fabric, "autoscaler", None) is not None:
+            fabric.autoscaler.backlog_fn = self.offload_backlog
+        return transport
+
+    # ---------------------------------------------------------------- stats
+    def active_runs(self) -> int:
+        with self._runs_lock:
+            return len(self._runs)
+
+    def offload_backlog(self) -> int:
+        """Cross-run count of ready offload steps not yet granted a lane
+        — the autoscaler's aggregate-pressure signal. Capped at the
+        offload lane width: the broker can never be fed more concurrent
+        tasks than the runtime has lanes, so reporting the raw heap depth
+        would scale up workers the runtime cannot keep busy."""
+        with self._runs_lock:
+            # same eligibility filter as _dispatch_all: a failing run's
+            # heap is draining dead weight, not future broker load
+            ready = sum(len(r.ready[True]) for r in self._runs.values()
+                        if not r.failures and not r.cancelled)
+        return min(ready, self.max_workers)
+
+    # ------------------------------------------------------------- shutdown
+    def close(self, timeout: Optional[float] = 60.0):
+        """Drain in-flight steps, fail still-pending runs with
+        :class:`RuntimeClosed`, and join the lanes + driver."""
+        with self._close_lock:
+            first = not self._closed
+            self._closed = True
+        if not first:
+            # another thread (e.g. the shim's reaper) owns the teardown:
+            # block until it finishes so close() always means closed
+            self._close_done.wait(timeout)
+            return
+        self._inbox.put(("stop",))
+        self._driver.join(timeout=timeout)
+        self._flush_orphaned_inbox()
+        self._offload_pool.shutdown(wait=True)
+        self._local_pool.shutdown(wait=True)
+        self._misc_pool.shutdown(wait=True)
+        self._close_done.set()
+
+    def _flush_orphaned_inbox(self):
+        """Fail submissions enqueued after the driver exited (SimpleQueue
+        is thread-safe; concurrent flushers each drain distinct items).
+
+        Strictly a dead-driver path: while the driver lives (e.g. a close
+        whose join timed out on a long in-flight step) the inbox belongs
+        to it — stealing a "done"/"cancel" message here would wedge the
+        drain forever."""
+        if self._driver.is_alive():
+            return
+        while True:
+            try:
+                msg = self._inbox.get_nowait()
+            except queue.Empty:
+                return
+            if msg[0] == "submit":
+                msg[1].handle._finish(error=RuntimeClosed("runtime closed"))
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ----------------------------------------------------------- driver loop
+    def _drive(self):
+        while True:
+            msg = self._inbox.get()
+            try:
+                if self._drive_one(msg):
+                    return
+            except BaseException as e:
+                # a driver-side fault (not a step failure — those ride the
+                # done queue) must never silently hang every handle: fail
+                # the active runs with it and keep serving
+                for run in list(self._runs.values()):
+                    self._finalize(run, e)
+                if self._draining and not self._runs:
+                    return
+
+    def _drive_one(self, msg) -> bool:
+        kind = msg[0]
+        touched: List[_Run] = []
+        if kind == "stop":
+            self._draining = True
+            for run in list(self._runs.values()):
+                run.ready = {True: [], False: []}
+                touched.append(run)
+        elif kind == "submit":
+            run = msg[1]
+            if self._draining:
+                run.handle._finish(error=RuntimeClosed("runtime closed"))
+                return False
+            with self._runs_lock:
+                self._runs[run.run_id] = run
+            self._fair.add(run.run_id, run.weight)
+            for nm, d in run.indeg.items():
+                if d == 0:
+                    self._push_ready(run, nm)
+            touched.append(run)
+        elif kind == "done":
+            run = self._complete(*msg[1:])
+            if run is not None:
+                touched.append(run)
+        elif kind == "cancel":
+            run = self._runs.get(msg[1])
+            if run is not None and not run.cancelled:
+                run.cancelled = True
+                run.ready = {True: [], False: []}
+                touched.append(run)
+        self._dispatch_all()
+        for run in touched:
+            if run.run_id in self._runs:
+                self._reap(run)
+        return self._draining and not self._runs
+
+    def _push_ready(self, run: _Run, name: str):
+        s = run.steps[name]
+        prio = 0.0
+        if hasattr(run.policy, "dispatch_priority"):
+            prio = run.policy.dispatch_priority(s)
+        lane = run.policy.should_offload(s)
+        heapq.heappush(run.ready[lane], (-prio, run.order_idx[name], name))
+
+    def _dispatch_all(self):
+        """Grant free lane slots: fair share picks the run, the run's
+        critical-path heap picks the step — (deficit share, -cpl)."""
+        if self._draining:
+            return
+        for lane, pool in ((True, self._offload_pool),
+                           (False, self._local_pool)):
+            while self._busy[lane] < self._slots[lane]:
+                cands = {r.run_id: r for r in self._runs.values()
+                         if r.ready[lane] and not r.failures
+                         and not r.cancelled}
+                if not cands:
+                    break
+                run = cands[self._fair.pick(cands)]
+                _, _, name = heapq.heappop(run.ready[lane])
+                s = run.steps[name]
+                self._fair.charge(run.run_id, self._est_cost(s))
+                self._prefetch_successors(run, s)
+                if lane:
+                    run.emit("suspend", s.name)
+                run.inflight += 1
+                self._busy[lane] += 1
+                pool.submit(self._lane, run, s, lane)
+
+    def _est_cost(self, s: Step) -> float:
+        cm = self.manager.cost_model
+        est = cm.exec_time(s, "local")
+        if self.cloud_tier in cm.tiers:
+            est = max(est, cm.exec_time(s, self.cloud_tier))
+        return est if est > 0 else 1.0
+
+    def _complete(self, run_id: str, name: str, err, offloaded: bool
+                  ) -> Optional[_Run]:
+        self._busy[offloaded] -= 1
+        run = self._runs.get(run_id)
+        if run is None:
+            return None
+        run.inflight -= 1
+        if err is not None:
+            run.failures.append(err)     # keep draining siblings
+            return run
+        if run.cancelled:
+            return run
+        if offloaded:
+            run.emit("resume", name)
+        run.completed.add(name)
+        # outputs cached BEFORE successors dispatch (see RunCheckpointer)
+        if run.checkpointer is not None:
+            run.checkpointer._cache_outputs(run.steps[name])
+        if not self._draining:
+            # close() drains IN-FLIGHT work only: a completion during
+            # shutdown must not unlock (and run) the rest of the DAG
+            for m in run.succs.get(name, ()):
+                if m in run.indeg and m not in run.completed:
+                    run.indeg[m] -= 1
+                    if run.indeg[m] == 0:
+                        self._push_ready(run, m)
+        run.ckpt_dirty = True
+        return run
+
+    def _reap(self, run: _Run):
+        """Finalize ``run`` if it reached a terminal state. Called on the
+        driver after dispatch, so a ready-but-unlaned step (heap nonempty)
+        is never mistaken for a stall."""
+        # durable per completion, not per wave — written after dispatch so
+        # this completion's successors start before the pickle lands
+        if run.ckpt_dirty:
+            run.ckpt_dirty = False
+            if run.checkpointer is not None:
+                try:
+                    run.checkpointer._save_checkpoint(run.completed)
+                except BaseException as e:
+                    # durability is the contract: an unwritable checkpoint
+                    # fails THIS run (as the per-run executor did), not
+                    # the whole driver
+                    run.failures.append(e)
+        if len(run.completed) == len(run.steps) and not run.failures:
+            self._finalize(run, None)
+        elif run.inflight == 0:
+            if run.cancelled:
+                self._finalize(run, RunCancelled(
+                    f"run {run.run_id} cancelled"))
+            elif run.failures:
+                self._finalize(run, run.failures[0])
+            elif self._draining:
+                self._finalize(run, RuntimeClosed("runtime closed"))
+            elif not run.ready[True] and not run.ready[False]:
+                self._finalize(run, WorkflowFailure(
+                    "dependency cycle or failed step"))
+
+    def _finalize(self, run: _Run, error: Optional[BaseException]):
+        with self._runs_lock:
+            del self._runs[run.run_id]
+        self._fair.remove(run.run_id)
+        self.runs_completed += 1
+        if run.checkpointer is not None:
+            run.checkpointer._ckpt_cache.clear()   # release pinned copies
+        if error is not None:
+            run.handle._finish(error=error)
+            return
+
+        def reintegrate():
+            try:
+                uris = run.fetch if run.fetch is not None else [
+                    u for u in run.wf.variables if run.mdss.version(u)]
+                run.handle._finish(result={
+                    uri: run.mdss.get(uri, "local") for uri in uris
+                    if run.mdss.version(uri)})
+            except BaseException as e:
+                run.handle._finish(error=e)
+
+        try:
+            self._misc_pool.submit(reintegrate)
+        except BaseException as e:
+            # pool already shut (e.g. a straggler finishing after close()'s
+            # join timeout): the handle must still resolve, never hang
+            run.handle._finish(error=e)
+
+    # ----------------------------------------------------------- lane bodies
+    def _lane(self, run: _Run, s: Step, offloaded: bool):
+        try:
+            if offloaded:
+                self._offload_with_recovery(run, s)
+            else:
+                self._run_local(run, s)
+            err = None
+        except BaseException as e:           # harvested by the driver
+            err = e
+        self._inbox.put(("done", run.run_id, s.name, err, offloaded))
+
+    def _run_local(self, run: _Run, s: Step):
+        rep = self.manager.execute(s, "local", mdss=run.mdss,
+                                   priority=run.priority)
+        run.emit("local", s.name, "local", seconds=rep.seconds)
+
+    def _offload_with_recovery(self, run: _Run, s: Step):
+        tiers_to_try = [self.cloud_tier] * max(1, s.retries) + ["local"]
+        last_err = None
+        for attempt, tier in enumerate(tiers_to_try):
+            try:
+                rep = self._execute_maybe_speculative(run, s, tier)
+                run.emit("offload", s.name, rep.tier,
+                         seconds=rep.seconds, bytes_in=rep.bytes_in,
+                         bytes_out=rep.bytes_out, code_only=rep.code_only,
+                         attempt=attempt, remote=rep.remote,
+                         worker_pid=rep.worker_pid)
+                return rep
+            except StepFailure as e:      # node failure -> retry / fallback
+                last_err = e
+                run.emit("retry", s.name, tier, attempt=attempt,
+                         error=str(e))
+        raise WorkflowFailure(f"step {s.name} failed on all tiers: {last_err}")
+
+    def _execute_maybe_speculative(self, run: _Run, s: Step, tier: str):
+        alt = self._alternate_tier(s, tier)
+        est = self.manager.cost_model.stats_for(s.name).measured_s.get(tier)
+        if run.speculate_after is None or alt is None or est is None:
+            return self.manager.execute(s, tier, mdss=run.mdss,
+                                        priority=run.priority)
+        timeout = est * run.speculate_after
+        # no context manager: pool shutdown must NOT join the straggler
+        spool = ThreadPoolExecutor(max_workers=2)
+
+        def execute(t):
+            return self.manager.execute(s, t, mdss=run.mdss,
+                                        priority=run.priority)
+        try:
+            primary = spool.submit(execute, tier)
+            done, _ = wait([primary], timeout=timeout)
+            if done:
+                return primary.result()
+            run.emit("speculate", s.name, alt, timeout=timeout)
+            backup = spool.submit(execute, alt)
+            # first *successful* finisher wins: a primary that fails fast
+            # right after the backup launches must not fail the step
+            pending = {primary, backup}
+            last_err, fenced_rep = None, None
+            while pending:
+                done, pending = wait(pending, return_when=FIRST_COMPLETED)
+                for f in done:
+                    try:
+                        rep = f.result()
+                    except StepFailure as e:
+                        last_err = e
+                        continue
+                    if rep.fenced:
+                        # the loser's report (its publish was refused) —
+                        # keep only as a fallback so the recorded offload
+                        # event reflects the twin that actually published
+                        fenced_rep = rep
+                        continue
+                    return rep
+            if fenced_rep is not None:
+                return fenced_rep
+            raise last_err                   # both twins failed
+        finally:
+            spool.shutdown(wait=False)
+
+    def _alternate_tier(self, s: Step, tier: str) -> Optional[str]:
+        """Best backup tier for speculation: the candidate with the lowest
+        modeled/measured execution time, NOT whatever dict order yields —
+        deterministic, and targeted at the fastest recovery. Unknown
+        estimates (0.0) tie and fall back to declaration order."""
+        cm = self.manager.cost_model
+        order = {nm: i for i, nm in enumerate(self.manager.tiers)}
+        cands = [nm for nm in self.manager.tiers if nm not in (tier, "local")]
+        if not cands:
+            return None
+        return min(cands, key=lambda nm: (cm.exec_time(s, nm), order[nm]))
+
+    def _prefetch_successors(self, run: _Run, s: Step):
+        """Warm the cloud tier with a dispatched step's successors' inputs.
+
+        Only inputs that already exist and are stale on the cloud tier
+        move; outputs of still-running steps are skipped (MDSS.prefetch is
+        best-effort and version-hazard-checked), so the transfer safely
+        overlaps this step's compute.
+        """
+        if not run.prefetch or self.cloud_tier not in self.manager.tiers:
+            return
+        for m in run.succs.get(s.name, ()):
+            succ = run.wf.steps[m]
+            if not run.policy.should_offload(succ):
+                continue
+            # skip vars s itself is about to rewrite: their current
+            # version is guaranteed dead by the time the successor reads
+            uris = [u for u in succ.inputs
+                    if u not in s.outputs
+                    and run.mdss.version(u)
+                    and not run.mdss.has_latest(u, self.cloud_tier)]
+            if uris and run.mdss.prefetch(uris, self.cloud_tier) is not None:
+                # emitted only for ADMITTED requests (None = shed at the
+                # MDSS concurrency cap), so the event log matches reality
+                run.emit("prefetch", succ.name, self.cloud_tier, uris=uris)

@@ -23,11 +23,19 @@ executor: when more steps are ready than workers, higher-priority steps
 dispatch first. The default ordering is critical-path-length-first
 (``critical_path_lengths``): the long pole of a wide heterogeneous DAG
 starts as early as possible, which is what bounds makespan.
+
+The multi-tenant runtime composes a **cross-run fair-share layer** on
+top: when several workflows contend for the same worker lanes, each free
+slot goes to the run with the smallest deficit-weighted share
+(``FairShare``, stride-scheduling style), and *within* that run the
+critical-path priority picks the step. Dispatch order is therefore
+(deficit-weighted run share, -cpl) — one wide workflow cannot starve the
+rest, and a heavier ``weight`` buys a run proportionally more slots.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Protocol
+from typing import Dict, Iterable, Optional, Protocol
 
 from repro.core.cost_model import CostModel
 from repro.core.mdss import MDSS
@@ -60,6 +68,54 @@ def critical_path_lengths(wf: Workflow, cost_model: Optional[CostModel] = None,
                 w = est
         cpl[s.name] = w + max((cpl[m] for m in succ[s.name]), default=0.0)
     return cpl
+
+
+class FairShare:
+    """Deficit-weighted cross-run scheduling (stride scheduling).
+
+    Each run carries a virtual time that advances by ``cost / weight``
+    whenever one of its steps is dispatched; every free worker slot goes
+    to the eligible run with the smallest virtual time. A run that just
+    burned many slots (a wide workflow flooding the ready set) accrues
+    virtual time fast and yields to the others; a run with weight *w*
+    receives ~*w*x the slots of a weight-1 run under contention.
+
+    Not thread-safe by itself — the runtime mutates it only from its
+    driver thread.
+    """
+
+    def __init__(self):
+        self._vtime: Dict[str, float] = {}
+        self._weight: Dict[str, float] = {}
+
+    def add(self, run_id: str, weight: float = 1.0):
+        # a newcomer starts at the current minimum, not at zero: joining
+        # late must not grant a catch-up monopoly over long-running peers
+        base = min(self._vtime.values(), default=0.0)
+        self._weight[run_id] = max(float(weight), 1e-9)
+        self._vtime[run_id] = base
+
+    def remove(self, run_id: str):
+        self._vtime.pop(run_id, None)
+        self._weight.pop(run_id, None)
+
+    def charge(self, run_id: str, cost: float = 1.0):
+        """Account one dispatched step of estimated ``cost`` seconds."""
+        if run_id in self._vtime:
+            self._vtime[run_id] += max(cost, 1e-9) / self._weight[run_id]
+
+    def pick(self, run_ids: Iterable[str]) -> Optional[str]:
+        """The eligible run owed the next slot (smallest virtual time;
+        ties break deterministically by run id)."""
+        best = None
+        for rid in run_ids:
+            key = (self._vtime.get(rid, 0.0), rid)
+            if best is None or key < best[0]:
+                best = (key, rid)
+        return None if best is None else best[1]
+
+    def share_of(self, run_id: str) -> float:
+        return self._vtime.get(run_id, 0.0)
 
 
 class OffloadPolicy(Protocol):

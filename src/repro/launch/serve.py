@@ -8,7 +8,12 @@ A miniature continuous-batching server:
   * ``decode`` (remotable) advances every active slot one token per call;
     finished slots (EOS or length budget) free up,
   * params + caches stay resident on the serving tier via MDSS — decode
-    offloads are code-only; only the sampled tokens cross the link.
+    offloads are code-only; only the sampled tokens cross the link,
+  * both workflows execute over **one shared** :class:`EmeraldRuntime`
+    (the server is a tenant of the long-lived scheduler, not the owner of
+    per-call pools): decode submissions carry an *interactive* priority
+    class, so on a fabric-backed tier they overtake batch tenants' queued
+    tasks sharing the same runtime.
 
 CLI demo (CPU-sized):
   python -m repro.launch.serve --arch tinyllama-1.1b --reduced
@@ -26,9 +31,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig, RunConfig, ShapeProfile, reduced
-from repro.core import (CostModel, EmeraldExecutor, MDSS, MigrationManager,
-                        Workflow, default_tiers, partition)
+from repro.core import (CostModel, EmeraldExecutor, EmeraldRuntime, MDSS,
+                        MigrationManager, Workflow, default_tiers, partition)
 from repro.models.model_zoo import Model
+
+INTERACTIVE = 1          # broker dispatch class for latency-bound decodes
 
 
 @dataclass
@@ -42,18 +49,36 @@ class Request:
 
 class Server:
     def __init__(self, run: RunConfig, params, *, policy: str = "annotate",
-                 max_batch: Optional[int] = None):
+                 max_batch: Optional[int] = None,
+                 runtime: Optional[EmeraldRuntime] = None):
         self.run = run
         self.model = Model(run)
+        self.policy = policy
         self.max_batch = max_batch or run.shape.global_batch
-        self.tiers = default_tiers()
-        self.cost_model = CostModel(self.tiers)
-        self.mdss = MDSS(self.tiers, cost_model=self.cost_model)
-        self.manager = MigrationManager(self.tiers, self.mdss, self.cost_model)
+        self._owns_runtime = runtime is None
+        if runtime is None:
+            self.tiers = default_tiers()
+            self.cost_model = CostModel(self.tiers)
+            self.mdss = MDSS(self.tiers, cost_model=self.cost_model)
+            self.manager = MigrationManager(self.tiers, self.mdss,
+                                            self.cost_model)
+            runtime = EmeraldRuntime(self.manager, policy=policy,
+                                     name="serve")
+        else:                    # tenant of an existing multi-tenant runtime
+            self.manager = runtime.manager
+            self.tiers = self.manager.tiers
+            self.cost_model = self.manager.cost_model
+            self.mdss = runtime.mdss
+        self.runtime = runtime
         self._build_workflows()
         self.params = params
         self.queue: List[Request] = []
         self.stats = {"prefills": 0, "decode_calls": 0, "tokens_out": 0}
+
+    def close(self):
+        # a tenant never tears down a shared runtime it doesn't own
+        if self._owns_runtime:
+            self.runtime.close()
 
     def _build_workflows(self):
         prefill, decode = self.model.prefill, self.model.decode_step
@@ -76,8 +101,15 @@ class Server:
             wfd.var(v)
         wfd.step("decode", decode_fn, inputs=("params", "tokens", "cache"),
                  outputs=("logits", "cache"), remotable=True)
-        self.ex_prefill = EmeraldExecutor(partition(wfp), self.manager)
-        self.ex_decode = EmeraldExecutor(partition(wfd), self.manager)
+        # two typed front-ends over the ONE shared runtime: prefill and
+        # decode interleave with each other (and any co-tenant workflows)
+        # on the same lanes, fabric, and MDSS
+        self.ex_prefill = EmeraldExecutor(partition(wfp), self.manager,
+                                          policy=self.policy,
+                                          runtime=self.runtime)
+        self.ex_decode = EmeraldExecutor(partition(wfd), self.manager,
+                                         policy=self.policy,
+                                         runtime=self.runtime)
 
     # ------------------------------------------------------------------ api
     def submit(self, req: Request):
@@ -110,7 +142,10 @@ class Server:
         max_new = max(r.max_new for r in reqs)
         budget = min(max_new - 1, self.run.shape.seq_len - plen - 1)
         for _ in range(budget):
-            out = self.ex_decode.run({"tokens": last}, fetch=("logits",))
+            # latency-bound: decode tasks overtake batch tenants' queued
+            # work when the runtime's cloud tier is fabric-backed
+            out = self.ex_decode.submit({"tokens": last}, fetch=("logits",),
+                                        priority=INTERACTIVE).result()
             self.stats["decode_calls"] += 1
             last = jnp.argmax(out["logits"], -1)
             for i, r in enumerate(reqs):
@@ -160,6 +195,7 @@ def main():
     for r in done:
         print(f"req {r.rid}: {len(r.tokens)} tokens -> {r.tokens[:8]}...")
     print(f"{srv.stats} in {dt:.2f}s; transfers: {srv.transfer_report()}")
+    srv.close()
 
 
 if __name__ == "__main__":

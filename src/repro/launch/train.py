@@ -26,8 +26,8 @@ import numpy as np
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config, make_run
 from repro.configs.base import ModelConfig, RunConfig, ShapeProfile, reduced
-from repro.core import (CostModel, EmeraldExecutor, MDSS, MigrationManager,
-                        Workflow, default_tiers, partition)
+from repro.core import (CostModel, EmeraldExecutor, EmeraldRuntime, MDSS,
+                        MigrationManager, Workflow, default_tiers, partition)
 from repro.data.pipeline import SyntheticLMData
 from repro.models.model_zoo import Model
 
@@ -68,8 +68,16 @@ class Trainer:
                 remotable=True, flops_hint=6.0 * n_params * tokens,
                 bytes_hint=2.0 * n_params)
         self.workflow = wf
+        # one long-lived runtime across the whole fit loop: lanes, driver
+        # and compile caches are set up once, not once per training step
+        self.runtime = EmeraldRuntime(self.manager, policy=self.policy,
+                                      name="train")
         self.executor = EmeraldExecutor(
-            partition(wf), self.manager, policy=self.policy)
+            partition(wf), self.manager, policy=self.policy,
+            runtime=self.runtime)
+
+    def close(self):
+        self.runtime.close()
 
     def _step_fn(self):
         step = self.model.train_step
@@ -157,6 +165,7 @@ def main():
     tr = Trainer(run, policy=args.policy, ckpt_dir=args.ckpt_dir)
     tr.fit(args.steps, resume=args.resume)
     print("transfer report:", tr.transfer_report())
+    tr.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,144 @@
+"""Locality-aware dispatch vs residency-blind on warm shared data.
+
+The workload is the placement trap Juve et al. measured on EC2 and the
+paper's MDSS exists to exploit: two tenants read a pool of shared input
+shards that are **already resident on the cloud tier** (published once,
+cloud-side), and each step's raw compute estimate slightly favours the
+local tier. A residency-blind decision (``policy="cost_model"`` — it
+charges staging toward the cloud but treats locally-stale data as free
+to read) keeps every step local and silently stages the whole warm pool
+back across the WAN. Locality-aware dispatch (``policy="locality"``)
+scores each tier as ``est_exec + est_transfer(bytes not resident)`` and
+follows the data instead: same work, near-zero staged bytes, no
+wall-clock loss.
+
+Also measured: per-namespace residency budgets — a tenant whose outputs
+pile up on the cloud tier is held under its configured byte budget by
+LRU eviction with write-back to local (``run_budget``).
+
+The smoke gate (scripts/smoke.sh) asserts the staged-byte reduction, the
+no-slower wall-clock, and the under-budget residency.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import (CostModel, EmeraldRuntime, MDSS, MigrationManager,
+                        Workflow, default_tiers)
+
+SMOKE = bool(os.environ.get("LOCALITY_SMOKE"))
+
+SHARDS = 8 if SMOKE else 16          # distinct warm shards per tenant
+SHARD_BYTES = (2 << 20) if SMOKE else (4 << 20)
+TENANTS = 2
+STEP_S = 0.01                        # real per-step work (sleep)
+
+
+def _emerald():
+    tiers = default_tiers()
+    cm = CostModel(tiers)
+    mdss = MDSS(tiers, cost_model=cm)
+    return MigrationManager(tiers, mdss, cm)
+
+
+def _use_fn(i: int):
+    out = f"o{i}"
+
+    def fn(**kw):
+        time.sleep(STEP_S)
+        (val,) = kw.values()
+        return {out: np.float64(float(np.asarray(val).ravel()[0]))}
+    return fn
+
+
+def make_tenant(name: str) -> Workflow:
+    """One step per shared shard: read it, produce a small output."""
+    wf = Workflow(name)
+    for i in range(SHARDS):
+        wf.var(f"C{i}")
+        wf.step(f"use{i}", _use_fn(i), inputs=(f"C{i}",),
+                outputs=(f"o{i}",), remotable=True, jax_step=False)
+    return wf
+
+
+def run_arm(policy: str) -> Tuple[float, int]:
+    """(wall seconds, staged bytes) for TENANTS concurrent submissions
+    under ``policy``, with every shard warm on the cloud tier and exec
+    estimates slightly favouring local."""
+    mgr = _emerald()
+    cm, mdss = mgr.cost_model, mgr.mdss
+    shard = np.ones(SHARD_BYTES // 8, np.float64)
+    with EmeraldRuntime(mgr, policy=policy, max_workers=4,
+                        local_workers=4) as rt:
+        for i in range(SHARDS):
+            rt.publish(f"C{i}", shard, tier="cloud")   # warm, cloud-only
+            # measured estimates: local looks ~20% faster per step, the
+            # bait a residency-blind comparison takes
+            cm.stats_for(f"use{i}").measured_s.update(
+                local=STEP_S * 0.8, cloud=STEP_S)
+        mdss.reset_accounting()
+        outputs = [f"o{i}" for i in range(SHARDS)]
+        t0 = time.perf_counter()
+        # fetch= limits re-integration to each tenant's own outputs — the
+        # warm shared pool stays wherever the scheduler left it (pulling
+        # it local at result() would charge both arms the same bytes)
+        handles = [rt.submit(make_tenant(f"t{k}"), {}, fetch=outputs)
+                   for k in range(TENANTS)]
+        for h in handles:
+            h.result(120)
+        wall = time.perf_counter() - t0
+        staged = mdss.total_bytes_moved()
+    return wall, staged
+
+
+def run_budget() -> Tuple[int, int, int]:
+    """(resident cloud bytes, budget, evictions) after a tenant whose
+    1 MiB outputs land on the cloud tier runs under a 2-output budget."""
+    mgr = _emerald()
+    mdss = mgr.mdss
+    chunk = np.ones((512, 256), np.float64)            # 1 MiB
+    n_out = 6 if SMOKE else 12
+    wf = Workflow("hot")
+    wf.var("x")
+    for i in range(n_out):
+        wf.step(f"w{i}", (lambda i=i: lambda x: {f"b{i}": chunk + i})(),
+                inputs=("x",), outputs=(f"b{i}",), remotable=True,
+                jax_step=False)
+    budget = 2 * chunk.nbytes
+    with EmeraldRuntime(mgr, max_workers=4) as rt:
+        h = rt.submit(wf, {"x": np.float64(0.0)},
+                      residency_budget={"cloud": budget})
+        h.result(120)
+        deadline = time.monotonic() + 10
+        while mdss.namespace_tier_bytes(h.namespace, "cloud") > budget \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        resident = mdss.namespace_tier_bytes(h.namespace, "cloud")
+        evictions = mdss.evictions
+    return resident, budget, evictions
+
+
+def main() -> List[str]:
+    wall_blind, staged_blind = run_arm("cost_model")
+    wall_aware, staged_aware = run_arm("locality")
+    reduction = staged_blind / max(staged_aware, 1)
+    resident, budget, evictions = run_budget()
+    return [
+        row("locality_blind", wall_blind,
+            f"staged_mb={staged_blind / 2**20:.1f}"),
+        row("locality_aware", wall_aware,
+            f"staged_mb={staged_aware / 2**20:.1f} "
+            f"staged_reduction={reduction:.0f}x"),
+        row("locality_budget", 0.0,
+            f"resident_mb={resident / 2**20:.1f} "
+            f"budget_mb={budget / 2**20:.1f} evictions={evictions}"),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

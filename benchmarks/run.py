@@ -13,6 +13,10 @@
   bench_runtime          beyond-paper    (multi-tenant runtime: K
                                           concurrent submissions vs K
                                           serial runs; warm resubmission)
+  bench_locality         beyond-paper    (locality-aware dispatch vs
+                                          residency-blind on warm shared
+                                          data; residency budgets +
+                                          eviction)
 
 Prints ``name,us_per_call,derived`` CSV. Roofline numbers come from the
 dry-run (see launch/dryrun.py), not from here — this container's CPU wall
@@ -26,7 +30,7 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_at, bench_dag, bench_fabric,
-                            bench_lm_workflow, bench_mdss,
+                            bench_lm_workflow, bench_locality, bench_mdss,
                             bench_parallel_offload, bench_partitioner,
                             bench_runtime)
     modules = [
@@ -34,6 +38,7 @@ def main() -> None:
         ("bench_parallel_offload", bench_parallel_offload),
         ("bench_dag", bench_dag),
         ("bench_runtime", bench_runtime),
+        ("bench_locality", bench_locality),
         ("bench_partitioner", bench_partitioner),
         ("bench_fabric", bench_fabric),
         ("bench_at", bench_at),

@@ -23,7 +23,7 @@ from typing import Optional, Sequence
 
 from repro.cloud.autoscaler import Autoscaler, AutoscalerConfig  # noqa: F401
 from repro.cloud.broker import (Broker, FabricError, RemoteStepError,  # noqa: F401
-                                Task, WorkerLostError)
+                                ShipTimeout, Task, WorkerLostError)
 from repro.cloud.pool import SpawnError, WorkerHandle, WorkerPool  # noqa: F401
 from repro.cloud.tasklib import STEP_REGISTRY, register_step, resolve  # noqa: F401
 from repro.cloud.wire import decode, encode, recv_msg, send_msg  # noqa: F401

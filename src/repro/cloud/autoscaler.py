@@ -17,6 +17,13 @@ per-run ready heaps (steps admitted but not yet granted a lane), so a
 burst of concurrent submissions scales the pool before the broker queue
 alone would show it — and a nonzero runtime backlog blocks scale-down.
 
+A third signal is **residency churn**: ``churn_fn`` reads the MDSS's
+cumulative evicted-byte counter, and a churn *rate* above
+``churn_high_bytes_per_s`` means tenants are thrashing their residency
+budgets — evicting warm data only to re-stage it. Growing the pool (and
+with it the working capacity per tenant) is the productive response;
+while churn is nonzero, scale-down is also held off.
+
 Scale-down is deliberately slower than scale-up (classic asymmetric
 policy): only after the pool has been fully idle with an empty queue for
 ``idle_scale_down_s`` does one worker retire per tick — and retiring
@@ -44,16 +51,22 @@ class AutoscalerConfig:
     target_drain_s: float = 1.0     # desired backlog drain time (cost signal)
     idle_scale_down_s: float = 2.0  # full-idle dwell before retiring a worker
     warm_ttl_s: float = 30.0        # warm worker lifetime before real kill
+    churn_high_bytes_per_s: float = 32e6   # eviction churn that means thrash
 
 
 class Autoscaler:
     def __init__(self, broker: Broker, config: Optional[AutoscalerConfig] = None,
-                 backlog_fn: Optional[Callable[[], int]] = None):
+                 backlog_fn: Optional[Callable[[], int]] = None,
+                 churn_fn: Optional[Callable[[], int]] = None):
         self.broker = broker
         self.config = config or AutoscalerConfig()
         # aggregate pressure beyond the broker queue: e.g. the multi-tenant
         # runtime's cross-run count of ready-but-unlaned offload steps
         self.backlog_fn = backlog_fn
+        # cumulative evicted-bytes counter (MDSS residency budgets); the
+        # tick differentiates it into a churn rate
+        self.churn_fn = churn_fn
+        self._churn_mark: tuple = (None, 0.0)     # (t, cumulative bytes)
         self._idle_since: Optional[float] = None
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -67,6 +80,20 @@ class Autoscaler:
             return max(0, int(self.backlog_fn()))
         except Exception:
             return 0   # runtime mid-shutdown
+
+    def _churn_rate(self, now: float) -> float:
+        """Evicted bytes/s since the previous tick (0 with no feed)."""
+        if self.churn_fn is None:
+            return 0.0
+        try:
+            total = float(self.churn_fn())
+        except Exception:
+            return 0.0   # store mid-shutdown
+        prev_t, prev_total = self._churn_mark
+        self._churn_mark = (now, total)
+        if prev_t is None or now <= prev_t:
+            return 0.0
+        return max(0.0, (total - prev_total) / (now - prev_t))
 
     # ----------------------------------------------------------------- tick
     def desired_workers(self) -> int:
@@ -91,17 +118,23 @@ class Autoscaler:
         n = self.broker.num_workers()
         depth = self.broker.queue_depth() + self._backlog()
         busy = self.broker.inflight()
+        churn = self._churn_rate(now)
         action = {"workers": n, "queue": depth, "added": 0, "retired": 0,
-                  "reaped": 0}
+                  "reaped": 0, "churn_bps": churn}
 
         desired = self.desired_workers()
+        if churn > cfg.churn_high_bytes_per_s:
+            # residency thrash: tenants are evicting warm bytes only to
+            # re-stage them — grow the pool instead of grinding the wire
+            desired = max(desired, min(cfg.max_workers, n + 1))
         if desired > n:
             for _ in range(desired - n):
                 self.broker.add_worker()
                 self.scale_ups += 1
                 action["added"] += 1
             self._idle_since = None
-        elif depth == 0 and busy == 0 and n > cfg.min_workers:
+        elif depth == 0 and busy == 0 and churn == 0.0 \
+                and n > cfg.min_workers:
             if self._idle_since is None:
                 self._idle_since = now
             elif now - self._idle_since >= cfg.idle_scale_down_s:

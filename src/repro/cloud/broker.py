@@ -47,6 +47,19 @@ class WorkerLostError(FabricError):
     """The task's worker died and the requeue budget is exhausted."""
 
 
+class ShipTimeout(FabricError):
+    """``ship`` did not complete within its timeout. ``task`` carries the
+    handle the old API swallowed: when the ship was still queued it has
+    been cancelled (removed from the queue, future failed with
+    ``FabricError``); when already in flight the worker will still reply,
+    and ``task.result()`` / ``task.done()`` harvest it — the result no
+    longer lands in a dead inbox."""
+
+    def __init__(self, msg: str, task: "Task"):
+        super().__init__(msg)
+        self.task = task
+
+
 @dataclass
 class Task:
     task_id: int
@@ -100,6 +113,7 @@ class Broker:
         # counters (all mutated under self._cond)
         self.tasks_done = 0
         self.tasks_requeued = 0
+        self.tasks_cancelled = 0
         self.workers_lost = 0
         self.warm_hits = 0
         self.bytes_sent = 0
@@ -134,10 +148,41 @@ class Broker:
 
     def ship(self, value, timeout: Optional[float] = 60.0) -> Task:
         """Round-trip ``value`` through a worker; returns the completed
-        task (``.value`` result, ``.bytes_sent/received``, ``.seconds``)."""
+        task (``.value`` result, ``.bytes_sent/received``, ``.seconds``).
+
+        On timeout the task is handled explicitly instead of silently
+        swallowed: a still-queued ship is **cancelled** (no worker ever
+        wastes a slot on it), an in-flight ship stays harvestable via the
+        :class:`ShipTimeout` exception's ``task`` — either way no orphan
+        result can land in a dead inbox.
+        """
+        from concurrent.futures import TimeoutError as _FutTimeout
         t = self.submit(kind="ship", value=value)
-        t.value = t.result(timeout)
+        try:
+            t.value = t.result(timeout)
+        except (_FutTimeout, TimeoutError):
+            if self.cancel(t):
+                raise ShipTimeout(
+                    f"ship {t.task_id} timed out after {timeout}s while "
+                    "queued; cancelled", t) from None
+            raise ShipTimeout(
+                f"ship {t.task_id} timed out after {timeout}s in flight; "
+                "harvest .task.result() when the worker replies", t) \
+                from None
         return t
+
+    def cancel(self, task: Task) -> bool:
+        """Withdraw a still-queued task (its future fails with
+        ``FabricError``). Returns False when the task already dispatched
+        to a worker (or finished) — in-flight work is not interrupted."""
+        with self._cond:
+            if task not in self._queue:
+                return False
+            self._queue.remove(task)
+            self.tasks_cancelled += 1
+        task.future.set_exception(
+            FabricError(f"task {task.task_id} cancelled"))
+        return True
 
     # -------------------------------------------------------------- workers
     def add_worker(self) -> str:

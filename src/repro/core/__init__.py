@@ -5,11 +5,13 @@ from repro.core.partitioner import (MigrationPoint, PartitionError,  # noqa: F40
 from repro.core.mdss import (MDSS, MDSSTransferError, NamespacedMDSS,  # noqa: F401
                              Transport, namespace_of, nbytes_of)
 from repro.core.migration import MigrationManager, StepFailure  # noqa: F401
-from repro.core.runtime import (EmeraldRuntime, Event, RunCancelled,  # noqa: F401
-                                RunHandle, RuntimeClosed, WorkflowFailure)
+from repro.core.runtime import (AdmissionRefused, EmeraldRuntime,  # noqa: F401
+                                Event, RunCancelled, RunHandle,
+                                RuntimeClosed, WorkflowFailure)
 from repro.core.executor import EmeraldExecutor  # noqa: F401
 from repro.core.cost_model import CostModel, StepStats  # noqa: F401
 from repro.core.scheduler import (AnnotatePolicy, CostModelPolicy,  # noqa: F401
-                                  FairShare, NeverPolicy,
-                                  critical_path_lengths, make_policy)
+                                  FairShare, LocalityPolicy, NeverPolicy,
+                                  PlacementDecision, critical_path_lengths,
+                                  make_policy)
 from repro.core.tiers import Tier, default_tiers  # noqa: F401

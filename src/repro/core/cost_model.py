@@ -86,6 +86,18 @@ class CostModel:
         bw = self.measured_bw.get((src, dst)) or tier.bw_to(dst)
         return tier.link_latency_s + nbytes / bw
 
+    def placement_cost(self, step, tier_name: str, staleness=()) -> float:
+        """Locality-aware per-tier score: ``est_exec(tier)`` plus the
+        modeled transfer of every input byte NOT already resident there.
+        ``staleness`` is ``MDSS.staleness`` output — ``(uri, src_tier,
+        nbytes)`` triples — so each stale input is charged at the
+        bandwidth of the link it would actually cross."""
+        t = self.exec_time(step, tier_name)
+        for _, src, n in staleness:
+            if src != tier_name:
+                t += self.transfer_time(n, src, tier_name)
+        return t
+
     def offload_benefit(self, step, *, stale_in_bytes: float,
                         result_bytes: float, src: str = "local",
                         dst: str = "cloud") -> float:

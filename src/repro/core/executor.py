@@ -47,7 +47,8 @@ class EmeraldExecutor(RunCheckpointer):
                  checkpoint_dir: Optional[str] = None,
                  prefetch: bool = True,
                  runtime: Optional[EmeraldRuntime] = None):
-        assert policy in ("annotate", "cost_model", "never")
+        from repro.core.scheduler import POLICIES
+        assert policy in POLICIES
         self.pwf = pwf
         self.manager = manager
         RunCheckpointer.__init__(self, manager.mdss, pwf.workflow,

@@ -27,7 +27,18 @@ URI-keyed, versioned, multi-tier data store:
     common ``shared/`` namespace, so N concurrent workflows get isolated
     outputs while warm cross-run data (params, observations) is stored —
     and stays cloud-resident — exactly once. ``drop_namespace`` is run
-    teardown: it frees every replica the run published.
+    teardown: it frees every replica the run published,
+  * **residency budgets** (per namespace, per tier): resident bytes are
+    accounted incrementally on every copy install/replace/delete, and
+    ``set_namespace_budget(ns, tier, max_bytes)`` bounds a namespace's
+    footprint on a tier. Crossing the budget schedules background LRU
+    **eviction** of the coldest entries: the latest version is written
+    back to the local tier first (plain replica movement through the
+    hazard-checked transfer path — never a versioned put, so it can
+    neither bump a fence epoch nor resurrect a dropped namespace), then
+    the over-budget replica is deleted. ``capacity_bytes`` is the
+    store-wide ceiling the runtime's admission control checks against,
+    and ``eviction_bytes`` churn is the autoscaler's thrash signal.
 
 Values are arbitrary pytrees of arrays / scalars. A ``Transport`` performs
 the actual movement; the default in-process transport re-places arrays on
@@ -35,11 +46,12 @@ the destination tier's mesh (``jax.device_put``) when it has one.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -90,10 +102,13 @@ class _Entry:
 
 class MDSS:
     def __init__(self, tiers, transport: Optional[Transport] = None,
-                 cost_model=None):
+                 cost_model=None, capacity_bytes: Optional[int] = None):
         self.tiers = tiers
         self.transport = transport or Transport(tiers)
         self.cost_model = cost_model
+        # store-wide resident-byte ceiling; the runtime's admission
+        # control refuses new submissions when residency nears it
+        self.capacity_bytes = capacity_bytes
         self._entries: Dict[str, _Entry] = {}
         # bumped by drop_namespace: fence tokens carry the epoch, so a
         # draining step's post-drop write-back is refused instead of
@@ -123,6 +138,17 @@ class MDSS:
         self.prefetch_ops: int = 0
         self.prefetch_bytes: int = 0
         self.fenced_puts: int = 0
+        # residency budgets + incremental resident-byte accounting: every
+        # copies mutation goes through _set_copy/_del_copy so these stay
+        # in lockstep with the store without full scans
+        self._budgets: Dict[Tuple[str, str], int] = {}     # (ns, tier) -> max
+        self._ns_tier_bytes: Dict[Tuple[str, str], int] = {}
+        self._use_tick = itertools.count(1)                # LRU clock
+        self._last_used: Dict[Tuple[str, str], int] = {}   # (uri, tier)
+        self._evict_pending: set = set()   # (ns, tier) enforcement scheduled
+        self.evictions: int = 0
+        self.eviction_bytes: int = 0       # cumulative churn (autoscaler feed)
+        self.eviction_events: list = []    # bounded like sync_events
 
     # ------------------------------------------------------------------ api
     def put(self, uri: str, value, tier: str = "local",
@@ -142,7 +168,7 @@ class MDSS:
                 return None
             e.version += 1
             e.writer = tier
-            e.copies[tier] = (e.version, value)
+            self._set_copy(uri, e, tier, e.version, value)
             return e.version
 
     def put_many(self, values: Dict[str, Any], tier: str = "local",
@@ -196,7 +222,14 @@ class MDSS:
 
     def stale_bytes(self, uris, tier: str) -> int:
         """Bytes that WOULD move to make ``tier`` current for ``uris``."""
-        total = 0
+        return sum(n for _, _, n in self.staleness(uris, tier))
+
+    def staleness(self, uris, tier: str) -> List[Tuple[str, str, int]]:
+        """Per-URI transfer obligation of placing a reader on ``tier``:
+        ``(uri, freshest_src_tier, nbytes)`` for every entry whose latest
+        version is NOT already resident there. The locality scheduler
+        turns this into modeled transfer seconds per candidate tier."""
+        out: List[Tuple[str, str, int]] = []
         with self._lock:
             for uri in uris:
                 e = self._entries.get(uri)
@@ -204,8 +237,8 @@ class MDSS:
                     continue
                 src = self._freshest_tier(e)
                 if src is not None:
-                    total += nbytes_of(e.copies[src][1])
-        return total
+                    out.append((uri, src, nbytes_of(e.copies[src][1])))
+        return out
 
     def get(self, uri: str, tier: str = "local"):
         """Value at ``tier``, syncing from the freshest tier if stale."""
@@ -238,6 +271,7 @@ class MDSS:
                 if e is None:
                     raise KeyError(uri)
                 if self.has_latest(uri, tier):
+                    self._touch(uri, tier)        # a read access, for LRU
                     return moved
                 peer = self._inflight.get((uri, tier))
                 if peer is None:
@@ -274,7 +308,7 @@ class MDSS:
                         raise KeyError(uri)
                     cur = e.copies.get(tier)
                     if cur is None or cur[0] < snap_version:
-                        e.copies[tier] = (snap_version, shipped)
+                        self._set_copy(uri, e, tier, snap_version, shipped)
                         moved += n
                         self._account(uri, src, tier, n)
                         self.sync_events.append((uri, src, tier, n))
@@ -356,6 +390,175 @@ class MDSS:
         if self.cost_model is not None:
             self.modeled_seconds += self.cost_model.transfer_time(n, src, dst)
 
+    def _touch(self, uri: str, tier: str):
+        self._last_used[(uri, tier)] = next(self._use_tick)
+
+    def _set_copy(self, uri: str, e: _Entry, tier: str, version: int, value):
+        """Install/replace ``tier``'s copy (lock held) keeping the
+        incremental resident-byte counters and LRU clock current, and
+        schedule eviction when the write pushes a namespace over its
+        budget on this tier."""
+        key = (namespace_of(uri), tier)
+        old = e.copies.get(tier)
+        if old is not None:
+            self._ns_tier_bytes[key] = \
+                self._ns_tier_bytes.get(key, 0) - nbytes_of(old[1])
+        e.copies[tier] = (version, value)
+        self._ns_tier_bytes[key] = \
+            self._ns_tier_bytes.get(key, 0) + nbytes_of(value)
+        self._touch(uri, tier)
+        self._maybe_schedule_eviction(*key)
+
+    def _del_copy(self, uri: str, e: _Entry, tier: str) -> int:
+        """Drop ``tier``'s copy (lock held); returns the bytes freed."""
+        old = e.copies.pop(tier, None)
+        if old is None:
+            return 0
+        n = nbytes_of(old[1])
+        key = (namespace_of(uri), tier)
+        left = self._ns_tier_bytes.get(key, 0) - n
+        if left > 0:
+            self._ns_tier_bytes[key] = left
+        else:
+            self._ns_tier_bytes.pop(key, None)
+        self._last_used.pop((uri, tier), None)
+        return n
+
+    # ------------------------------------------- residency budgets / eviction
+    def set_namespace_budget(self, ns: str, tier: str,
+                             max_bytes: Optional[int]):
+        """Bound namespace ``ns``'s resident bytes on ``tier``
+        (``None`` clears the budget). If the namespace is already over,
+        background eviction starts immediately. The local tier is the
+        eviction write-back target and cannot carry a budget — accepting
+        one would be a bound that silently never evicts."""
+        if max_bytes is not None and tier == "local":
+            raise ValueError(
+                "local is the eviction write-back tier: a residency "
+                "budget there cannot be enforced")
+        with self._lock:
+            key = (ns, tier)
+            if max_bytes is None:
+                self._budgets.pop(key, None)
+                return
+            self._budgets[key] = int(max_bytes)
+            self._maybe_schedule_eviction(ns, tier)
+
+    def namespace_budget(self, ns: str, tier: str) -> Optional[int]:
+        with self._lock:
+            return self._budgets.get((ns, tier))
+
+    def namespace_tier_bytes(self, ns: str, tier: str) -> int:
+        """Bytes currently resident for namespace ``ns`` on ``tier``
+        (incremental counter — no scan)."""
+        with self._lock:
+            return self._ns_tier_bytes.get((ns, tier), 0)
+
+    def resident_bytes(self, tier: Optional[str] = None) -> int:
+        """Total resident bytes (all replicas), optionally one tier's."""
+        with self._lock:
+            return sum(v for (_, t), v in self._ns_tier_bytes.items()
+                       if tier is None or t == tier)
+
+    def over_capacity(self, headroom: float = 1.0) -> bool:
+        """True when residency reaches ``headroom`` x ``capacity_bytes``
+        (False when no capacity is configured) — the admission signal."""
+        cap = self.capacity_bytes
+        return bool(cap) and self.resident_bytes() >= headroom * cap
+
+    def _maybe_schedule_eviction(self, ns: str, tier: str):
+        """Lock held: kick a background enforcement thread for an
+        over-budget (namespace, tier), at most one at a time per pair."""
+        key = (ns, tier)
+        budget = self._budgets.get(key)
+        if tier == "local" or budget is None \
+                or self._ns_tier_bytes.get(key, 0) <= budget \
+                or key in self._evict_pending:
+            return
+        self._evict_pending.add(key)
+        threading.Thread(target=self._evict_task, args=key, daemon=True,
+                         name="mdss-evict").start()
+
+    def _evict_task(self, ns: str, tier: str):
+        key = (ns, tier)
+        while True:
+            try:
+                n, _ = self.enforce_budget(ns, tier)
+            except Exception:
+                n = 0       # transport wedged / store torn down mid-evict
+            with self._lock:
+                budget = self._budgets.get(key)
+                if n == 0 or budget is None \
+                        or self._ns_tier_bytes.get(key, 0) <= budget:
+                    # done, unenforceable (no candidates), or budget gone:
+                    # stop — the next over-budget write re-triggers
+                    self._evict_pending.discard(key)
+                    return
+
+    def enforce_budget(self, ns: str, tier: str,
+                       writeback_tier: str = "local") -> Tuple[int, int]:
+        """Evict LRU entries of ``ns`` on ``tier`` until the configured
+        budget fits; returns ``(entries_evicted, bytes_evicted)``.
+
+        Eviction is write-back-then-drop: if ``tier`` holds the only
+        latest copy it is first re-replicated on ``writeback_tier``
+        through the normal hazard-checked transfer path. That path is
+        plain replica movement — it never bumps a version and never
+        recreates an entry (a namespace dropped mid-eviction surfaces as
+        ``KeyError`` and is skipped), so eviction cannot defeat the fence
+        epochs that keep a draining step's stale write-back out. Entries
+        with a transfer currently in flight to ``tier`` are not
+        candidates (the installing thread would just re-create the copy).
+        """
+        budget = self._budgets.get((ns, tier))
+        if budget is None or tier == writeback_tier:
+            return (0, 0)
+        evicted_n = evicted_b = 0
+        prefix = ns + "/" if ns else ""
+        guard = 0
+        while True:
+            guard += 1
+            if guard > 10000:    # pathological transport: never spin forever
+                break
+            with self._lock:
+                if self._ns_tier_bytes.get((ns, tier), 0) <= budget:
+                    break
+                cands = [(self._last_used.get((u, tier), 0), u)
+                         for u, e in self._entries.items()
+                         if u.startswith(prefix) and tier in e.copies
+                         and (u, tier) not in self._inflight
+                         and (ns != "" or "/" not in u)]
+                if not cands:
+                    break
+                _, victim = min(cands)
+            try:
+                # write-back outside the lock (hazard-checked install)
+                self._ensure_one(victim, writeback_tier)
+            except KeyError:
+                continue       # entry/namespace dropped mid-eviction
+            except MDSSTransferError:
+                break          # wedged transfer: give up, retry next call
+            with self._lock:
+                e = self._entries.get(victim)
+                if e is None:
+                    continue
+                tcopy = e.copies.get(tier)
+                wcopy = e.copies.get(writeback_tier)
+                if tcopy is None:
+                    continue
+                if wcopy is None or wcopy[0] < tcopy[0]:
+                    continue   # a newer write landed on tier: re-ship it
+                n = self._del_copy(victim, e, tier)
+                self.evictions += 1
+                self.eviction_bytes += n
+                evicted_n += 1
+                evicted_b += n
+                self.eviction_events.append((victim, tier, n))
+                if len(self.eviction_events) > self.sync_events_cap:
+                    del self.eviction_events[
+                        :len(self.eviction_events) - self.sync_events_cap]
+        return evicted_n, evicted_b
+
     # ----------------------------------------------------------- namespaces
     def namespaced(self, ns: str, shared: Optional[str] = None
                    ) -> "NamespacedMDSS":
@@ -376,14 +579,13 @@ class MDSS:
 
     def namespace_resident_bytes(self, ns: str) -> int:
         """Bytes currently resident (all replicas) under namespace ``ns``."""
-        prefix = ns + "/"
         with self._lock:
-            return sum(nbytes_of(val)
-                       for u, e in self._entries.items() if u.startswith(prefix)
-                       for _, val in e.copies.values())
+            return sum(v for (n, _), v in self._ns_tier_bytes.items()
+                       if n == ns)
 
     def drop_namespace(self, ns: str) -> Tuple[int, int]:
-        """Run teardown: delete every entry under ``ns/``.
+        """Run teardown: delete every entry under ``ns/`` (and the
+        namespace's residency budgets).
 
         Returns ``(entries_dropped, resident_bytes_freed)``. In-flight
         work targeting dropped URIs finishes harmlessly: the transfer
@@ -395,12 +597,15 @@ class MDSS:
         prefix = ns + "/"
         with self._lock:
             doomed = [u for u in self._entries if u.startswith(prefix)]
-            freed = sum(nbytes_of(val)
-                        for u in doomed
-                        for _, val in self._entries[u].copies.values())
+            freed = 0
             for u in doomed:
+                e = self._entries[u]
+                for t in list(e.copies):
+                    freed += self._del_copy(u, e, t)
                 del self._entries[u]
             self._ns_epoch[ns] = self._ns_epoch.get(ns, 0) + 1
+            for key in [k for k in self._budgets if k[0] == ns]:
+                del self._budgets[key]
         return len(doomed), freed
 
     # ------------------------------------------------------------ reporting
@@ -415,6 +620,9 @@ class MDSS:
         self.prefetch_ops = 0
         self.prefetch_bytes = 0
         self.fenced_puts = 0
+        self.evictions = 0
+        self.eviction_bytes = 0
+        self.eviction_events.clear()
 
 
 class NamespacedMDSS:
@@ -526,6 +734,9 @@ class NamespacedMDSS:
     def stale_bytes(self, uris, tier: str) -> int:
         return self.base.stale_bytes([self._rkey(u) for u in uris], tier)
 
+    def staleness(self, uris, tier: str):
+        return self.base.staleness([self._rkey(u) for u in uris], tier)
+
     def get(self, uri: str, tier: str = "local"):
         return self.base.get(self._rkey(uri), tier)
 
@@ -548,6 +759,13 @@ class NamespacedMDSS:
     # ----------------------------------------------------------- accounting
     def bytes_moved_here(self) -> int:
         return self.base.namespace_bytes(self.ns)
+
+    def set_budget(self, tier: str, max_bytes: Optional[int]):
+        """Residency budget for THIS run's namespace on ``tier``."""
+        self.base.set_namespace_budget(self.ns, tier, max_bytes)
+
+    def resident_bytes_here(self, tier: str) -> int:
+        return self.base.namespace_tier_bytes(self.ns, tier)
 
     def drop(self) -> Tuple[int, int]:
         return self.base.drop_namespace(self.ns)

@@ -88,6 +88,9 @@ class OffloadReport:
     fenced: bool = False            # write-back refused: a newer version
                                     # landed while this execution ran
                                     # (speculation loser / stale straggler)
+    staged_s: float = 0.0           # wall time spent staging inputs — the
+                                    # observed counterpart of the locality
+                                    # scheduler's modeled transfer score
 
 
 class MigrationManager:
@@ -181,7 +184,9 @@ class MigrationManager:
         fence = getattr(mdss, "fence_tokens", None)
         out_versions = fence(step.outputs) if fence is not None else \
             {k: mdss.version(k) for k in step.outputs}
+        t_stage = time.perf_counter()
         bytes_in, kwargs = self._stage_inputs(step, tier_name, uris, mdss)
+        staged_s = time.perf_counter() - t_stage
         fabric = getattr(tier, "worker_pool", None)
         if fabric is not None and fabric.can_run(step):
             out, dt, wire_in, wire_out, pid = self._execute_remote(
@@ -225,7 +230,7 @@ class MigrationManager:
         rep = OffloadReport(step.name, tier_name, dt, bytes_in, bytes_out,
                             code_only=(stale == 0 and bool(uris)),
                             remote=remote, worker_pid=worker_pid,
-                            fenced=fenced)
+                            fenced=fenced, staged_s=staged_s)
         self.reports.append(rep)
         if len(self.reports) > self.reports_cap:
             del self.reports[:len(self.reports) - self.reports_cap]

@@ -42,10 +42,26 @@ version-fenced losers, incremental per-completion checkpoints, and
 failure draining in-flight siblings before the run's handle fails —
 without disturbing the other runs.
 
-Known tradeoff: checkpoint *writes* happen on the driver thread (the
-durability-first choice the executor made); a run that checkpoints large
-state briefly delays other runs' dispatch. Cache snapshots stay O(changed
-vars); move the pickle off-thread if this shows up in profiles.
+Placement is **locality-aware** when the run's policy exposes
+``place()`` (``policy="locality"``): each ready step is scored per tier
+as ``est_exec + est_transfer(bytes not already resident)``, the cheaper
+tier picks the lane, and the full rationale (scores, stale bytes,
+reason) is emitted as a ``place`` event at dispatch. Fair-share charging
+uses the same score, so a run burning transfer budget pays for it.
+
+Checkpoint *writes* run on a dedicated writer lane (one thread), never
+on the driver: the driver freezes a consistent (completed, vars)
+snapshot, queues the pickle, and coalesces further dirt until the write
+lands. A per-run completion fence keeps ``result()`` from resolving
+before the run's final checkpoint is durable, and a failed write still
+fails that run (durability contract) without stalling other tenants.
+
+Admission control: when the shared store carries a ``capacity_bytes``
+ceiling, ``submit`` refuses new runs (:class:`AdmissionRefused`) once
+residency crosses ``admission_headroom`` x capacity — backpressure at
+the front door instead of an OOM mid-run. Per-run residency budgets
+(``submit(residency_budget={...})``) bound a tenant's footprint per tier
+with MDSS-side LRU eviction.
 """
 from __future__ import annotations
 
@@ -67,7 +83,8 @@ from repro.core.cost_model import CostModel
 from repro.core.mdss import MDSS
 from repro.core.migration import MigrationManager, StepFailure
 from repro.core.partitioner import PartitionedWorkflow, partition
-from repro.core.scheduler import FairShare, critical_path_lengths, make_policy
+from repro.core.scheduler import (POLICIES, FairShare, critical_path_lengths,
+                                  make_policy)
 from repro.core.tiers import default_tiers
 from repro.core.workflow import Step, Workflow
 
@@ -75,7 +92,8 @@ from repro.core.workflow import Step, Workflow
 @dataclass
 class Event:
     kind: str          # suspend | offload | resume | local | retry |
-                       # speculate | prefetch | checkpoint
+                       # speculate | prefetch | checkpoint | place |
+                       # step_done
     step: str
     tier: str = ""
     t: float = 0.0
@@ -84,6 +102,12 @@ class Event:
 
 class WorkflowFailure(RuntimeError):
     pass
+
+
+class AdmissionRefused(RuntimeError):
+    """submit() refused: the shared store is at/near its capacity
+    ceiling. Release namespaces, raise ``MDSS.capacity_bytes``, or
+    retry after eviction frees residency."""
 
 
 class RunCancelled(RuntimeError):
@@ -116,6 +140,9 @@ class RunCheckpointer:
         self.ckpt_name = ckpt_name or wf.name
         # uri -> (version, host snapshot)
         self._ckpt_cache: Dict[str, tuple] = {}
+        # (completed, vars) frozen by the driver for the async writer —
+        # see _freeze
+        self._pending: Optional[tuple] = None
 
     def _emit(self, kind, step, tier="", **info):   # rebound by the runtime
         pass
@@ -146,16 +173,31 @@ class RunCheckpointer:
             for uri in harvested.outputs:
                 self._cache_var(uri)
 
+    def _freeze(self, completed):
+        """Driver-side: freeze the (completed, vars) pair the NEXT
+        ``_save_checkpoint`` will write. The write itself runs on the
+        runtime's checkpoint lane, concurrent with the driver caching
+        later completions into ``_ckpt_cache`` — without this snapshot
+        the pickle could capture an output whose step is absent from
+        ``completed``, and resume would double-apply it."""
+        self._pending = (sorted(completed),
+                         {uri: val
+                          for uri, (_, val) in self._ckpt_cache.items()})
+
     def _save_checkpoint(self, completed):
         if not self.checkpoint_dir:
             return
+        pend, self._pending = self._pending, None
+        if pend is None:     # direct (synchronous) caller: live cache
+            pend = (sorted(completed),
+                    {uri: val for uri, (_, val) in self._ckpt_cache.items()})
+        names, snapshot = pend
         os.makedirs(self.checkpoint_dir, exist_ok=True)
-        snapshot = {uri: val for uri, (_, val) in self._ckpt_cache.items()}
         tmp = self._ckpt_path() + ".tmp"
         with open(tmp, "wb") as f:
-            pickle.dump({"completed": sorted(completed), "vars": snapshot}, f)
+            pickle.dump({"completed": list(names), "vars": snapshot}, f)
         os.replace(tmp, self._ckpt_path())
-        self._emit("checkpoint", "<workflow>", n=len(completed))
+        self._emit("checkpoint", "<workflow>", n=len(names))
 
     def _load_checkpoint(self):
         if not self.checkpoint_dir or not os.path.exists(self._ckpt_path()):
@@ -267,6 +309,8 @@ class _Run:
     failures: List[BaseException] = field(default_factory=list)
     cancelled: bool = False
     ckpt_dirty: bool = False
+    ckpt_inflight: int = 0          # writes queued on the checkpoint lane
+    placements: Dict[str, Any] = field(default_factory=dict)
 
     def emit(self, kind, step, tier="", **info):
         with self.lock:
@@ -289,12 +333,13 @@ class EmeraldRuntime:
                  local_workers: int = 4,
                  speculate_after: Optional[float] = None,
                  checkpoint_dir: Optional[str] = None, prefetch: bool = True,
-                 shared_namespace: str = "shared", name: str = "emerald"):
+                 shared_namespace: str = "shared", name: str = "emerald",
+                 admission_headroom: float = 0.9):
         if manager is None:
             tiers = tiers or default_tiers()
             cm = CostModel(tiers)
             manager = MigrationManager(tiers, MDSS(tiers, cost_model=cm), cm)
-        assert policy in ("annotate", "cost_model", "never")
+        assert policy in POLICIES
         self.manager = manager
         self.mdss = manager.mdss                 # the shared base store
         self.default_policy = policy
@@ -306,12 +351,18 @@ class EmeraldRuntime:
         self.prefetch = prefetch
         self.shared_namespace = shared_namespace
         self.name = name
+        self.admission_headroom = admission_headroom
 
         self._fair = FairShare()
         self._inbox: "queue.SimpleQueue" = queue.SimpleQueue()
         self._runs: Dict[str, _Run] = {}
         self._runs_lock = threading.Lock()       # _runs snapshot for stats
         self._busy = {True: 0, False: 0}         # keyed by offloaded?
+        # (run_id, step) pairs granted a lane and not yet harvested — the
+        # guard that makes a duplicate/late "done" (e.g. a speculation
+        # loser surfacing after the winner) a no-op instead of a
+        # double-decrement of lane slots and successor in-degrees
+        self._outstanding: set = set()
         self._slots = {True: max_workers, False: local_workers}
         self._counter = itertools.count(1)
         self._closed = False
@@ -328,6 +379,12 @@ class EmeraldRuntime:
         # never stalls the driver (and with it every other run's dispatch)
         self._misc_pool = ThreadPoolExecutor(
             max_workers=2, thread_name_prefix=f"{name}-finalize")
+        # dedicated checkpoint writer lane: pickle writes must never
+        # serialise the driver loop (one slow-disk tenant would stall
+        # every other run's dispatch); one thread keeps per-run write
+        # order trivially FIFO
+        self._ckpt_pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"{name}-ckpt")
         self._driver = threading.Thread(target=self._drive, daemon=True,
                                         name=f"{name}-driver")
         self._driver.start()
@@ -337,6 +394,7 @@ class EmeraldRuntime:
                policy: Optional[str] = None, fetch=None, resume: bool = False,
                weight: float = 1.0, priority: int = 0,
                namespace: Optional[str] = None,
+               residency_budget: Optional[Dict[str, int]] = None,
                speculate_after=_AUTO, prefetch: Optional[bool] = None,
                checkpointer: Optional[RunCheckpointer] = None,
                events: Optional[List[Event]] = None,
@@ -350,10 +408,20 @@ class EmeraldRuntime:
         store un-namespaced — the compat shim's mode). ``weight`` is the
         fair-share knob (2.0 = twice the lane share under contention);
         ``priority`` is the fabric dispatch class (higher overtakes lower
-        in the broker queue). Returns a :class:`RunHandle`.
+        in the broker queue). ``residency_budget`` maps tier name ->
+        max resident bytes for this run's namespace (MDSS evicts LRU
+        entries back to local past the budget). Raises
+        :class:`AdmissionRefused` when the shared store is within
+        ``admission_headroom`` of its ``capacity_bytes`` ceiling.
+        Returns a :class:`RunHandle`.
         """
         if self._closed:
             raise RuntimeClosed("runtime is closed")
+        if self.mdss.over_capacity(self.admission_headroom):
+            raise AdmissionRefused(
+                f"shared store holds {self.mdss.resident_bytes()} of "
+                f"{self.mdss.capacity_bytes} capacity bytes (headroom "
+                f"{self.admission_headroom:.0%}): submission refused")
         if resume and namespace is None:
             # a fresh auto namespace has no prior state OR checkpoint to
             # resume from — silently re-running the whole DAG (including
@@ -370,6 +438,13 @@ class EmeraldRuntime:
         ns = f"run{n}" if namespace is None else namespace
         mdss = self.mdss if ns == "" else self.mdss.namespaced(
             ns, shared=self.shared_namespace)
+        if residency_budget:
+            if not ns:
+                raise ValueError(
+                    "residency_budget needs a namespaced run (an "
+                    "un-namespaced submission shares the base store)")
+            for tier_name, max_bytes in residency_budget.items():
+                self.mdss.set_namespace_budget(ns, tier_name, max_bytes)
 
         completed: set = set()
         for uri, val in (init_vars or {}).items():
@@ -456,13 +531,16 @@ class EmeraldRuntime:
     def attach_fabric(self, fabric, tier_names=("cloud",)):
         """Back ``tier_names`` with an offload fabric, swap the MDSS
         transport for its RPCTransport, and point the fabric autoscaler
-        (when present) at this runtime's aggregate ready backlog."""
+        (when present) at this runtime's aggregate ready backlog AND the
+        store's eviction churn — residency thrash grows the pool instead
+        of grinding the same bytes back and forth."""
         from repro.cloud import attach
         transport = attach(self.manager.tiers, fabric, tier_names,
                            mdss=self.mdss,
                            cost_model=self.manager.cost_model)
         if getattr(fabric, "autoscaler", None) is not None:
             fabric.autoscaler.backlog_fn = self.offload_backlog
+            fabric.autoscaler.churn_fn = lambda: self.mdss.eviction_bytes
         return transport
 
     # ---------------------------------------------------------------- stats
@@ -501,6 +579,7 @@ class EmeraldRuntime:
         self._offload_pool.shutdown(wait=True)
         self._local_pool.shutdown(wait=True)
         self._misc_pool.shutdown(wait=True)
+        self._ckpt_pool.shutdown(wait=True)
         self._close_done.set()
 
     def _flush_orphaned_inbox(self):
@@ -568,6 +647,15 @@ class EmeraldRuntime:
             run = self._complete(*msg[1:])
             if run is not None:
                 touched.append(run)
+        elif kind == "ckpt_done":
+            run = self._runs.get(msg[1])
+            if run is not None:
+                run.ckpt_inflight -= 1
+                if msg[2] is not None:
+                    # durability is the contract: an unwritable checkpoint
+                    # fails THIS run, not the whole driver
+                    run.failures.append(msg[2])
+                touched.append(run)
         elif kind == "cancel":
             run = self._runs.get(msg[1])
             if run is not None and not run.cancelled:
@@ -585,7 +673,17 @@ class EmeraldRuntime:
         prio = 0.0
         if hasattr(run.policy, "dispatch_priority"):
             prio = run.policy.dispatch_priority(s)
-        lane = run.policy.should_offload(s)
+        place = getattr(run.policy, "place", None)
+        if place is not None:
+            # locality-aware lane choice, decided when the step becomes
+            # ready — its inputs are final here (every producer
+            # completed), so the residency map it scores is the one its
+            # staging will actually see
+            decision = place(s)
+            run.placements[name] = decision
+            lane = decision.offload
+        else:
+            lane = run.policy.should_offload(s)
         heapq.heappush(run.ready[lane], (-prio, run.order_idx[name], name))
 
     def _dispatch_all(self):
@@ -604,15 +702,28 @@ class EmeraldRuntime:
                 run = cands[self._fair.pick(cands)]
                 _, _, name = heapq.heappop(run.ready[lane])
                 s = run.steps[name]
-                self._fair.charge(run.run_id, self._est_cost(s))
+                decision = run.placements.pop(name, None)
+                self._fair.charge(run.run_id, self._est_cost(s, decision))
+                if decision is not None:
+                    run.emit("place", s.name, decision.tier,
+                             reason=decision.reason, scores=decision.scores,
+                             stale_bytes=decision.stale_bytes)
                 self._prefetch_successors(run, s)
                 if lane:
                     run.emit("suspend", s.name)
                 run.inflight += 1
                 self._busy[lane] += 1
+                self._outstanding.add((run.run_id, name))
                 pool.submit(self._lane, run, s, lane)
 
-    def _est_cost(self, s: Step) -> float:
+    def _est_cost(self, s: Step, decision=None) -> float:
+        # fair-share charge: with a locality decision the chosen tier's
+        # exec+transfer score is the run's real cost; otherwise the
+        # worst-tier exec estimate (the pre-locality behaviour)
+        if decision is not None:
+            est = decision.scores.get(decision.tier, 0.0)
+            if est > 0:
+                return est
         cm = self.manager.cost_model
         est = cm.exec_time(s, "local")
         if self.cloud_tier in cm.tiers:
@@ -621,6 +732,16 @@ class EmeraldRuntime:
 
     def _complete(self, run_id: str, name: str, err, offloaded: bool
                   ) -> Optional[_Run]:
+        key = (run_id, name)
+        if key not in self._outstanding:
+            # duplicate/late harvest — a speculation loser (or replayed
+            # done message) surfacing after the winner already completed
+            # the step. Decrementing again would free a lane slot that
+            # was never re-taken and, worse, double-decrement successor
+            # in-degrees: a successor still waiting on another input
+            # would dispatch early and read a hole. Drop it.
+            return None
+        self._outstanding.discard(key)
         self._busy[offloaded] -= 1
         run = self._runs.get(run_id)
         if run is None:
@@ -634,6 +755,7 @@ class EmeraldRuntime:
         if offloaded:
             run.emit("resume", name)
         run.completed.add(name)
+        run.emit("step_done", name, offloaded=offloaded)
         # outputs cached BEFORE successors dispatch (see RunCheckpointer)
         if run.checkpointer is not None:
             run.checkpointer._cache_outputs(run.steps[name])
@@ -652,18 +774,39 @@ class EmeraldRuntime:
         """Finalize ``run`` if it reached a terminal state. Called on the
         driver after dispatch, so a ready-but-unlaned step (heap nonempty)
         is never mistaken for a stall."""
-        # durable per completion, not per wave — written after dispatch so
-        # this completion's successors start before the pickle lands
-        if run.ckpt_dirty:
+        # durable per completion, not per wave. The pickle runs on the
+        # dedicated checkpoint lane (never the driver): the driver
+        # freezes a consistent (completed, vars) snapshot, queues the
+        # write, and coalesces further dirt until the ckpt_done message
+        # returns — at most one write in flight per run.
+        if run.checkpointer is None:
             run.ckpt_dirty = False
-            if run.checkpointer is not None:
+        elif run.ckpt_dirty and run.ckpt_inflight == 0:
+            run.ckpt_dirty = False
+            completed = set(run.completed)
+            run.checkpointer._freeze(completed)
+
+            def write(run=run, completed=completed):
                 try:
-                    run.checkpointer._save_checkpoint(run.completed)
+                    run.checkpointer._save_checkpoint(completed)
+                    err = None
                 except BaseException as e:
-                    # durability is the contract: an unwritable checkpoint
-                    # fails THIS run (as the per-run executor did), not
-                    # the whole driver
-                    run.failures.append(e)
+                    err = e
+                self._inbox.put(("ckpt_done", run.run_id, err))
+
+            try:
+                run.ckpt_inflight += 1
+                self._ckpt_pool.submit(write)
+            except BaseException as e:
+                # lane already shut (straggler completion after close's
+                # join timeout): durability is the contract — fail the run
+                run.ckpt_inflight -= 1
+                run.failures.append(e)
+        if run.ckpt_inflight > 0:
+            # per-run completion fence: the handle must not resolve (nor
+            # the run finalize in any direction) before its checkpoint is
+            # durable — the ckpt_done message re-enters this reap
+            return
         if len(run.completed) == len(run.steps) and not run.failures:
             self._finalize(run, None)
         elif run.inflight == 0:
@@ -733,7 +876,7 @@ class EmeraldRuntime:
                          seconds=rep.seconds, bytes_in=rep.bytes_in,
                          bytes_out=rep.bytes_out, code_only=rep.code_only,
                          attempt=attempt, remote=rep.remote,
-                         worker_pid=rep.worker_pid)
+                         worker_pid=rep.worker_pid, staged_s=rep.staged_s)
                 return rep
             except StepFailure as e:      # node failure -> retry / fallback
                 last_err = e

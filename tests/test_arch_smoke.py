@@ -10,6 +10,10 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
+
+# compile-heavy: excluded from the smoke fast lane (-m "not slow"),
+# still part of tier-1 (plain pytest runs everything)
+pytestmark = pytest.mark.slow
 from repro.configs.base import RunConfig, ShapeProfile, reduced
 from repro.data.pipeline import SyntheticLMData
 from repro.models.model_zoo import Model

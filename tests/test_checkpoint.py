@@ -12,6 +12,10 @@ import pytest
 
 from repro.checkpoint import Checkpointer
 
+# compile-heavy: excluded from the smoke fast lane (-m "not slow"),
+# still part of tier-1 (plain pytest runs everything)
+pytestmark = pytest.mark.slow
+
 # The explicit-mesh API (jax.sharding.AxisType / jax.set_mesh) is newer
 # than this container's jax; the subprocess scripts below require it.
 import jax as _jax

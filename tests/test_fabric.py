@@ -10,8 +10,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.cloud import (Autoscaler, AutoscalerConfig, Fabric,
-                         RemoteStepError, WorkerLostError, attach)
+from repro.cloud import (Autoscaler, AutoscalerConfig, Fabric, FabricError,
+                         RemoteStepError, ShipTimeout, WorkerLostError,
+                         attach)
 from repro.cloud.wire import decode, encode, recv_msg, send_msg
 from repro.core import (CostModel, EmeraldExecutor, MDSS, MigrationManager,
                         Workflow, default_tiers, partition)
@@ -101,6 +102,45 @@ def test_ship_moves_real_bytes(fabric):
     assert task.bytes_sent > val["a"].nbytes
     assert task.bytes_received > val["a"].nbytes
     assert task.seconds > 0
+
+
+def test_ship_timeout_cancels_queued_task():
+    """A ship that times out while still QUEUED is withdrawn: no worker
+    ever receives it, and its future resolves (failed) instead of the
+    orphaned result landing in a dead inbox."""
+    with Fabric(workers=1) as fabric:
+        blocker = fabric.broker.submit(step="sleep",
+                                       kwargs={"seconds": 0.5})
+        time.sleep(0.05)                     # the only worker is busy
+        with pytest.raises(ShipTimeout) as ei:
+            fabric.ship({"a": np.arange(4)}, timeout=0.05)
+        t = ei.value.task
+        assert fabric.broker.queue_depth() == 0, \
+            "timed-out ship left an orphan in the queue"
+        assert fabric.broker.tasks_cancelled == 1
+        with pytest.raises(FabricError, match="cancelled"):
+            t.result(1)                      # resolved, not a dead inbox
+        blocker.result(30)
+        assert fabric.broker.tasks_done == 1, \
+            "a worker burned a slot on the cancelled ship"
+
+
+def test_ship_timeout_inflight_task_stays_harvestable():
+    """A ship that times out while IN FLIGHT is not lost: the exception
+    carries the task and the eventual worker reply is harvestable."""
+    with Fabric(workers=1) as fabric:
+        val = {"a": np.random.rand(1 << 22).astype(np.float64)}   # 32 MiB
+        # 5 ms: far longer than the idle dispatcher needs to pop the
+        # queue, far shorter than a 32 MiB round trip
+        with pytest.raises(ShipTimeout) as ei:
+            fabric.ship(val, timeout=0.005)
+        t = ei.value.task
+        if fabric.broker.tasks_cancelled:
+            pytest.skip("dispatcher lost the 5 ms race on a loaded box; "
+                        "the queued branch is covered above")
+        out = t.result(30)                   # the reply still arrives
+        np.testing.assert_array_equal(out["a"], val["a"])
+        assert fabric.broker.tasks_cancelled == 0
 
 
 def test_remote_exception_keeps_worker_alive(fabric, tmp_path):

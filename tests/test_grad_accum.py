@@ -3,11 +3,16 @@ import dataclasses
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.configs.base import RunConfig, ShapeProfile, reduced
 from repro.data.pipeline import SyntheticLMData
 from repro.models.model_zoo import Model
+
+# compile-heavy: excluded from the smoke fast lane (-m "not slow"),
+# still part of tier-1 (plain pytest runs everything)
+pytestmark = pytest.mark.slow
 
 
 def test_grad_accum_matches_full_batch():

@@ -622,6 +622,116 @@ def test_broker_priority_classes():
         "interactive-class task did not overtake the queued batch task"
 
 
+def test_duplicate_done_does_not_double_decrement_indegrees():
+    """Regression: a duplicate "done" harvest (a speculation loser
+    surfacing after the winner, or a replayed message) must be ignored —
+    before the `_outstanding` guard it double-decremented successor
+    in-degrees, dispatching a join step while its slow input was still
+    in flight, and corrupted the lane-slot accounting."""
+    wf = Workflow("dupdone")
+    wf.var("x")
+    wf.step("a", sleeper("a", 0.01, "ya"), inputs=("x",), outputs=("ya",),
+            remotable=True, jax_step=False)
+    wf.step("y", sleeper("y", 0.4, "yy"), inputs=("x",), outputs=("yy",),
+            remotable=True, jax_step=False)
+    wf.step("z", lambda ya, yy: {"z": np.float64(float(ya) + float(yy))},
+            inputs=("ya", "yy"), outputs=("z",), remotable=True,
+            jax_step=False)
+    rt = EmeraldRuntime(emerald(), max_workers=2)
+    try:
+        h = rt.submit(wf, {"x": np.float64(1.0)})
+        deadline = time.monotonic() + 10
+        while not any(e.kind == "step_done" and e.step == "a"
+                      for e in list(h.events)):
+            assert time.monotonic() < deadline, "step a never completed"
+            time.sleep(0.005)
+        # replay a's completion while y is still in flight
+        rt._inbox.put(("done", h.run_id, "a", None, True))
+        out = h.result(30)
+        assert float(out["z"]) == 4.0, "join step read a hole"
+        dones = [e for e in h.events
+                 if e.kind == "step_done" and e.step == "a"]
+        assert len(dones) == 1, "duplicate step_done emitted"
+    finally:
+        rt.close()
+    assert rt._busy == {True: 0, False: 0}, \
+        "duplicate done corrupted lane-slot accounting"
+
+
+def test_checkpoint_writes_off_driver_with_completion_fence(tmp_path):
+    """Checkpoint pickles run on the dedicated writer lane, the driver
+    keeps serving other tenants while a write blocks, and a run's handle
+    only resolves after its final checkpoint is durable."""
+    from repro.core.runtime import RunCheckpointer
+
+    gate = threading.Event()
+
+    class BlockingCkpt(RunCheckpointer):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self.threads = []
+            self.writes = []
+
+        def _save_checkpoint(self, completed):
+            self.threads.append(threading.current_thread().name)
+            assert gate.wait(10), "test gate never opened"
+            super()._save_checkpoint(completed)
+            self.writes.append(set(completed))
+
+    mgr = emerald()
+    with EmeraldRuntime(mgr, max_workers=4) as rt:
+        wfa = chain_wf("cka", 3, 0.02)
+        ck = BlockingCkpt(
+            rt.mdss.namespaced("nsa", shared=rt.shared_namespace), wfa,
+            str(tmp_path), ckpt_name="nsa.cka")
+        h = rt.submit(wfa, {"x": np.float64(1.0)}, namespace="nsa",
+                      checkpointer=ck)
+        # while A's first write is parked on the gate, another tenant's
+        # whole run completes: the driver loop is not serialized by the
+        # pickle (it used to be)
+        hb = rt.submit(chain_wf("ckb", 3, 0.01), {"x": np.float64(1.0)})
+        assert float(hb.result(10)["y3"]) == 8.0
+        # let every step of A finish while the first write stays gated,
+        # so the dirt provably coalesces into ONE follow-up write
+        deadline = time.monotonic() + 10
+        while sum(1 for e in list(h.events) if e.kind == "step_done") < 3:
+            assert time.monotonic() < deadline, "run A never finished"
+            time.sleep(0.005)
+        assert not h.done(), "run resolved before its checkpoint landed"
+        gate.set()
+        assert float(h.result(10)["y3"]) == 8.0
+        # completion fence: the last write that hit disk covers the whole
+        # run, and it happened on the checkpoint lane, not the driver
+        assert ck.writes and ck.writes[-1] == {"s1", "s2", "s3"}
+        assert all("ckpt" in t for t in ck.threads), ck.threads
+        # coalescing: completions that landed while the writer was
+        # blocked merged into one write instead of queueing three
+        assert len(ck.writes) < 3
+        import pickle as _pickle
+        with open(tmp_path / "nsa.cka.wfckpt", "rb") as f:
+            state = _pickle.load(f)
+        assert set(state["completed"]) == {"s1", "s2", "s3"}
+
+
+def test_flush_orphaned_inbox_resolves_raced_submit():
+    """A submit that raced close() (entry check passed, driver already
+    exited) must resolve with RuntimeClosed instead of hanging — the
+    dead-driver inbox flush owns it."""
+    from types import SimpleNamespace
+    from repro.core import RuntimeClosed
+    from repro.core.runtime import RunHandle
+
+    rt = EmeraldRuntime(emerald())
+    rt.close()
+    assert not rt._driver.is_alive()
+    handle = RunHandle("raced#1", "", rt, [])
+    rt._inbox.put(("submit", SimpleNamespace(handle=handle)))
+    rt._flush_orphaned_inbox()
+    assert handle.done() and handle.state == "failed"
+    with pytest.raises(RuntimeClosed):
+        handle.result(1)
+
+
 def test_autoscaler_sees_runtime_backlog():
     from repro.cloud.autoscaler import Autoscaler, AutoscalerConfig
 

@@ -16,6 +16,10 @@ from repro.core import (CostModel, EmeraldExecutor, MDSS, MigrationManager,
 from repro.launch.serve import Request, Server
 from repro.launch.train import Trainer
 
+# compile-heavy: excluded from the smoke fast lane (-m "not slow"),
+# still part of tier-1 (plain pytest runs everything)
+pytestmark = pytest.mark.slow
+
 
 def test_lm_training_through_emerald_learns(tmp_path):
     cfg = reduced(get_config("tinyllama-1.1b"), n_layers=2)

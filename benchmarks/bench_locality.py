@@ -76,7 +76,11 @@ def run_arm(policy: str) -> Tuple[float, int]:
     with EmeraldRuntime(mgr, policy=policy, max_workers=4,
                         local_workers=4) as rt:
         for i in range(SHARDS):
-            rt.publish(f"C{i}", shard, tier="cloud")   # warm, cloud-only
+            # distinct content per shard: the content-addressed data
+            # plane dedups identical bytes, which would let the blind
+            # arm off the hook for free — this bench measures placement,
+            # not dedup (bench_dataplane covers that)
+            rt.publish(f"C{i}", shard * (i + 1), tier="cloud")
             # measured estimates: local looks ~20% faster per step, the
             # bait a residency-blind comparison takes
             cm.stats_for(f"use{i}").measured_s.update(

@@ -17,28 +17,44 @@
                                           residency-blind on warm shared
                                           data; residency budgets +
                                           eviction)
+  bench_dataplane        beyond-paper    (content-addressed data plane:
+                                          warm-resubmit bytes on the
+                                          wire, chunk streaming vs
+                                          monolithic frames, memoized
+                                          duplicate submissions)
 
-Prints ``name,us_per_call,derived`` CSV. Roofline numbers come from the
-dry-run (see launch/dryrun.py), not from here — this container's CPU wall
-times say nothing about TPU performance.
+Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_5.json`` next
+to the repo root — per-bench wall clock, every CSV row, and each
+module's ``SUMMARY`` dict (bytes on the wire, speedups) — so future PRs
+have a perf baseline to regress against.
+
+Roofline numbers come from the dry-run (see launch/dryrun.py), not from
+here — this container's CPU wall times say nothing about TPU
+performance.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_5.json")
+
 
 def main() -> None:
-    from benchmarks import (bench_at, bench_dag, bench_fabric,
-                            bench_lm_workflow, bench_locality, bench_mdss,
-                            bench_parallel_offload, bench_partitioner,
-                            bench_runtime)
+    from benchmarks import (bench_at, bench_dag, bench_dataplane,
+                            bench_fabric, bench_lm_workflow, bench_locality,
+                            bench_mdss, bench_parallel_offload,
+                            bench_partitioner, bench_runtime)
     modules = [
         ("bench_mdss", bench_mdss),
         ("bench_parallel_offload", bench_parallel_offload),
         ("bench_dag", bench_dag),
         ("bench_runtime", bench_runtime),
         ("bench_locality", bench_locality),
+        ("bench_dataplane", bench_dataplane),
         ("bench_partitioner", bench_partitioner),
         ("bench_fabric", bench_fabric),
         ("bench_at", bench_at),
@@ -46,15 +62,33 @@ def main() -> None:
     ]
     print("name,us_per_call,derived")
     failures = 0
+    report: dict = {}
     for name, mod in modules:
         t0 = time.time()
+        rows: list = []
+        failed = False
         try:
             for line in mod.main():
+                rows.append(line)
                 print(line, flush=True)
         except Exception as e:  # pragma: no cover
             failures += 1
+            failed = True
             print(f"{name}_FAILED,0,{type(e).__name__}: {e}", flush=True)
-        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        wall = time.time() - t0
+        entry = {"wall_s": round(wall, 2), "rows": rows, "failed": failed}
+        summary = getattr(mod, "SUMMARY", None)
+        if summary:
+            entry["summary"] = summary
+        report[name] = entry
+        print(f"# {name} done in {wall:.1f}s", file=sys.stderr)
+    try:
+        with open(BENCH_JSON, "w") as f:
+            json.dump({"bench_version": 5, "benches": report}, f, indent=2,
+                      sort_keys=True)
+        print(f"# wrote {os.path.abspath(BENCH_JSON)}", file=sys.stderr)
+    except OSError as e:  # pragma: no cover
+        print(f"# could not write {BENCH_JSON}: {e}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 

@@ -100,6 +100,41 @@ assert evictions > 0 and resident <= budget, (
 print(f"# locality smoke ok in {time.time() - t0:.1f}s")
 EOF
 
+echo "== dataplane smoke (chunk dedup + streaming + memoization) =="
+DATAPLANE_SMOKE=1 timeout 300 python - <<'EOF'
+import time
+from benchmarks import bench_dataplane
+
+t0 = time.time()
+cold_d, warm_d, _, wwall_d = bench_dataplane.run_resubmit(dedup=True)
+cold_b, warm_b, _, wwall_b = bench_dataplane.run_resubmit(dedup=False)
+mono, stream = bench_dataplane.run_stream()
+real, hits, memo_wall = bench_dataplane.run_memo()
+reduction = warm_b / max(warm_d, 1)
+print(f"bench_dataplane: warm resubmit {warm_b / 2**20:.1f}MB -> "
+      f"{warm_d / 2**10:.1f}KB ({reduction:.0f}x), wall "
+      f"{wwall_b * 1e3:.0f}ms -> {wwall_d * 1e3:.0f}ms | stream "
+      f"{mono * 1e3:.0f}ms -> {stream * 1e3:.0f}ms | memo execs={real} "
+      f"hits={hits}")
+# dedup gate: a warm resubmission of identical content must put at
+# least 2x fewer bytes on the wire than blind transfer (expected
+# ~1000x: metadata-only staging) at equal-or-better wall clock
+# (1.25x + 50 ms absorbs CI jitter at these absolute times)
+assert warm_d * 2 <= warm_b, (
+    f"dedup regression: warm resubmit moved {warm_d} bytes vs blind "
+    f"{warm_b}")
+assert wwall_d <= wwall_b * 1.25 + 0.05, (
+    f"dedup wall-clock regression: {wwall_d:.3f}s vs blind {wwall_b:.3f}s")
+# streaming gate: chunked recv_into must not lose to the monolithic
+# double-buffered path on a multi-MB payload (expected ~2-4x faster)
+assert stream <= mono * 1.10 + 0.01, (
+    f"streaming regression: {stream:.3f}s vs monolithic {mono:.3f}s")
+# memoization gate: the duplicate tenant must NOT re-execute the step
+assert real == 1 and hits == 1, (
+    f"memoization regression: {real} real executions, {hits} hits")
+print(f"# dataplane smoke ok in {time.time() - t0:.1f}s")
+EOF
+
 echo "== dag smoke (event-driven executor vs critical-path bound) =="
 DAG_SMOKE=1 timeout 120 python - <<'EOF'
 import time

@@ -26,7 +26,9 @@ from repro.cloud.broker import (Broker, FabricError, RemoteStepError,  # noqa: F
                                 ShipTimeout, Task, WorkerLostError)
 from repro.cloud.pool import SpawnError, WorkerHandle, WorkerPool  # noqa: F401
 from repro.cloud.tasklib import STEP_REGISTRY, register_step, resolve  # noqa: F401
-from repro.cloud.wire import decode, encode, recv_msg, send_msg  # noqa: F401
+from repro.cloud.wire import (ChannelStore, ChunkStore, WireError,  # noqa: F401
+                              content_digest, decode, encode, manifest_of,
+                              recv_msg, send_msg)
 
 
 def __getattr__(name):
@@ -45,12 +47,16 @@ class Fabric:
                  init_modules: Sequence[str] = ("repro.cloud.tasklib",),
                  max_attempts: int = 3, heartbeat_s: float = 0.25,
                  heartbeat_timeout_s: float = 5.0, replace_dead: bool = True,
-                 autoscaler: Optional[AutoscalerConfig] = None):
+                 autoscaler: Optional[AutoscalerConfig] = None,
+                 dedup: bool = True):
+        # dedup: content-addressed chunk dedup on every worker socket —
+        # repeated payloads (warm params in task kwargs, ship echoes)
+        # cross as digest references instead of bytes
         self.pool = WorkerPool(init_modules=init_modules,
-                               heartbeat_s=heartbeat_s)
+                               heartbeat_s=heartbeat_s, dedup=dedup)
         self.broker = Broker(self.pool, max_attempts=max_attempts,
                              heartbeat_timeout_s=heartbeat_timeout_s,
-                             replace_dead=replace_dead)
+                             replace_dead=replace_dead, dedup=dedup)
         self.autoscaler = Autoscaler(self.broker, autoscaler) \
             if autoscaler is not None else None
         self.broker.start_workers(workers)

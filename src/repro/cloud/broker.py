@@ -32,7 +32,8 @@ from typing import Any, Dict, List, Optional, Set
 from concurrent.futures import Future
 
 from repro.cloud.pool import WorkerHandle, WorkerPool
-from repro.cloud.wire import frame, recv_msg, send_msg
+from repro.cloud.wire import (ChannelStore, WireError, plan_msg, recv_msg,
+                              send_msg)
 
 
 class FabricError(RuntimeError):
@@ -78,6 +79,11 @@ class Task:
     bytes_received: int = 0
     seconds: float = 0.0
     worker_pid: int = 0
+    # per-direction split of ``seconds`` (worker-reported request receive
+    # time vs the remainder after compute) — feeds asymmetric-link
+    # bandwidth observation; 0.0 when the worker predates the field
+    up_s: float = 0.0
+    down_s: float = 0.0
     _send_t: float = 0.0
 
     def result(self, timeout: Optional[float] = None):
@@ -99,9 +105,14 @@ class Task:
 
 class Broker:
     def __init__(self, pool: WorkerPool, *, max_attempts: int = 3,
-                 heartbeat_timeout_s: float = 5.0, replace_dead: bool = True):
+                 heartbeat_timeout_s: float = 5.0, replace_dead: bool = True,
+                 dedup: bool = True):
         self.pool = pool
         self.max_attempts = max_attempts
+        # content-addressed dedup on every worker socket: repeated chunks
+        # (warm params staged again, echoed ship payloads) cross as digest
+        # references. Must match the pool's worker-side setting.
+        self.dedup = dedup
         self.heartbeat_timeout_s = heartbeat_timeout_s
         self.replace_dead = replace_dead
         self._cond = threading.Condition()
@@ -196,6 +207,7 @@ class Broker:
                 self._cond.notify_all()
                 return h.worker_id
         h = self.pool.spawn()
+        h.store = ChannelStore() if self.dedup else None
         h.reader = threading.Thread(target=self._reader_loop, args=(h,),
                                     daemon=True, name=f"fabric-read-{h.worker_id}")
         with self._cond:
@@ -327,15 +339,17 @@ class Broker:
                 msg["step"] = task.step
                 msg["fn"] = task.fn_bytes
                 msg["kwargs"] = task.kwargs
-            data = frame(msg)
+            plan = plan_msg(msg, worker.store)
             # stamp BEFORE sending: a fast loopback reply may reach the
-            # reader thread while sendall is still returning
+            # reader thread while sendall is still returning. plan_msg has
+            # already marked its chunks in the worker's store, so a failed
+            # send MUST kill the worker (mirrored stores would desync).
             with self._cond:
-                task.bytes_sent = len(data)
-                self.bytes_sent += len(data)
+                task.bytes_sent = plan.nbytes
+                self.bytes_sent += plan.nbytes
             task._send_t = time.perf_counter()
             try:
-                worker.sock.sendall(data)
+                plan.send(worker.sock)
             except OSError:
                 self._on_worker_death(worker)
 
@@ -343,8 +357,11 @@ class Broker:
     def _reader_loop(self, h: WorkerHandle):
         while True:
             try:
-                msg, n = recv_msg(h.sock)
-            except (EOFError, OSError):
+                msg, n = recv_msg(h.sock, h.store)
+            except (EOFError, OSError, WireError):
+                # WireError = corrupted frame or desynced dedup stores:
+                # the stream is unrecoverable, treat it as a dead worker
+                # (in-flight task requeues elsewhere)
                 break
             op = msg.get("op")
             if op == "heartbeat":
@@ -363,6 +380,12 @@ class Broker:
                     task.bytes_received = n
                     task.seconds = time.perf_counter() - task._send_t
                     task.worker_pid = h.pid
+                    # per-direction attribution: the worker measured how
+                    # long the request took to arrive and how long it
+                    # computed; the remainder is the reply's transfer
+                    task.up_s = float(msg.get("req_recv_s") or 0.0)
+                    work_s = float(msg.get("work_s") or 0.0)
+                    task.down_s = max(task.seconds - task.up_s - work_s, 0.0)
                     if op == "result":
                         self.tasks_done += 1
                         if task.kind == "ship" and task.seconds > 0:

@@ -22,7 +22,7 @@ from typing import Optional, Sequence
 import socket
 
 from repro.cloud import tasklib
-from repro.cloud.wire import recv_msg
+from repro.cloud.wire import WireError, recv_msg
 
 _SRC_DIR = os.path.dirname(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))))
@@ -43,14 +43,16 @@ class WorkerHandle:
     last_heartbeat: float = field(default_factory=time.monotonic)
     warm_since: float = 0.0
     reader: Optional[threading.Thread] = None
+    store: Optional[object] = None      # wire.ChannelStore (broker-owned)
 
 
 class WorkerPool:
     def __init__(self, *, init_modules: Sequence[str] = ("repro.cloud.tasklib",),
                  heartbeat_s: float = 0.25, spawn_timeout_s: float = 30.0,
-                 python: str = sys.executable):
+                 python: str = sys.executable, dedup: bool = True):
         self.init_modules = tuple(init_modules)
         self.heartbeat_s = heartbeat_s
+        self.dedup = dedup          # workers must match the broker's setting
         self.spawn_timeout_s = spawn_timeout_s
         self.python = python
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -79,7 +81,7 @@ class WorkerPool:
             conn.settimeout(self.spawn_timeout_s)
             try:
                 hello, _ = recv_msg(conn)
-            except (EOFError, OSError):
+            except (EOFError, OSError, WireError, socket.timeout):
                 conn.close()
                 continue
             if hello.get("op") != "hello":
@@ -110,6 +112,8 @@ class WorkerPool:
                "--worker-id", wid,
                "--init", ",".join(self.init_modules),
                "--heartbeat", str(self.heartbeat_s)]
+        if not self.dedup:
+            cmd.append("--no-dedup")
         proc = subprocess.Popen(cmd, env=env, stdout=subprocess.DEVNULL)
         deadline = time.monotonic() + self.spawn_timeout_s
         with self._cond:

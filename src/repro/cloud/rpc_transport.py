@@ -7,25 +7,32 @@ value is wire-encoded, round-tripped through a worker process, and
 decoded — so ``ensure`` / ``stale_bytes`` accounting now reflects bytes
 that genuinely crossed an OS process boundary.
 
-Each ship also yields a bandwidth sample that is fed into
-``CostModel.observe_bandwidth``, replacing the static ``DCN_BW``
-constant in offload decisions with measured wire throughput (the
-scheduler's ``CostModelPolicy`` picks this up via
-``CostModel.transfer_time``).
+Content addressing (``transfer_ex``): MDSS hands over the value's chunk
+manifest and how many of those bytes are *not* already resident at the
+destination tier. A fully-resident value ships as a **metadata-only
+round trip** (just the digests cross the fabric); anything else ships
+the value, where the socket-level chunk stores (wire.py) independently
+dedup whatever previously crossed that worker's connection. The
+returned byte count is the dedup-aware obligation MDSS accounts.
 
-Known cost: for a step that is itself dispatched remotely, staging a
-stale input via ``ensure`` round-trips the value through a worker and
-the task dispatch ships it once more — the driver process remains the
-data plane. A worker-side URI cache (workers holding tier replicas so
-``ensure`` targets them directly) is the natural next step and would
-also make repeat offloads code-only over the wire.
+Each ship also yields bandwidth samples fed into
+``CostModel.observe_bandwidth``. Workers report how long the request
+took to stream in (``req_recv_s``) and how long they computed, so large
+ships produce **per-direction** samples — ``(src, dst)`` from the
+request leg, ``(dst, src)`` from the reply leg — letting the locality
+scorer track asymmetric up/down links; small ships fall back to one
+combined sample (a tiny frame measures latency, not bandwidth).
 """
 from __future__ import annotations
 
 import threading
 from typing import Dict, Optional, Tuple
 
-from repro.core.mdss import Transport
+from repro.core.mdss import Transport, nbytes_of
+
+# below this, a leg's timing is latency-dominated: keep feeding the
+# combined round-trip sample instead of two noisy directional ones
+DIRECTIONAL_MIN_BYTES = 1 << 16
 
 
 class RPCTransport(Transport):
@@ -40,25 +47,61 @@ class RPCTransport(Transport):
         self._lock = threading.Lock()
         self.bytes_shipped: Dict[Tuple[str, str], int] = {}
         self.ship_events: list = []
+        self.metadata_only_ships = 0
 
     def _fabric_backed(self, name: str) -> bool:
         tier = self.tiers.get(name)
         return tier is not None and getattr(tier, "worker_pool", None) is not None
 
     def transfer(self, value, src: str, dst: str):
+        return self.transfer_ex(value, src, dst)[0]
+
+    def transfer_ex(self, value, src: str, dst: str, chunks=None,
+                    missing_bytes: Optional[int] = None):
+        """Move ``value`` src->dst; returns ``(value, owed_bytes)`` where
+        ``owed_bytes`` is the dedup-aware transfer obligation MDSS
+        accounts (0 for a metadata-only round trip)."""
+        logical = nbytes_of(value)
+        owed = logical if missing_bytes is None else missing_bytes
         if not (self._fabric_backed(src) or self._fabric_backed(dst)):
-            return super().transfer(value, src, dst)
-        task = self.fabric.ship(value, timeout=self.ship_timeout_s)
+            return super().transfer(value, src, dst), owed
+        if chunks is not None and missing_bytes == 0:
+            # every chunk already resident at dst: offer digests only —
+            # the warm-params staging path collapses to metadata
+            task = self.fabric.ship({"digests": [d for d, _ in chunks]},
+                                    timeout=self.ship_timeout_s)
+            out, observe = value, False
+        else:
+            task = self.fabric.ship(value, timeout=self.ship_timeout_s)
+            out, observe = task.value, True
         key = (src, dst)
         with self._lock:
             self.bytes_shipped[key] = self.bytes_shipped.get(key, 0) \
                 + task.bytes_sent
             self.ship_events.append((src, dst, task.bytes_sent, task.seconds))
-            if self.cost_model is not None and task.seconds > 0:
-                self.cost_model.observe_bandwidth(
-                    src, dst, task.bytes_sent + task.bytes_received,
-                    task.seconds)
-        return task.value
+            if not observe:
+                self.metadata_only_ships += 1
+            elif self.cost_model is not None:
+                directional = False
+                if task.up_s > 0 and task.bytes_sent >= DIRECTIONAL_MIN_BYTES:
+                    self.cost_model.observe_bandwidth(
+                        src, dst, task.bytes_sent, task.up_s)
+                    directional = True
+                if task.down_s > 0 and \
+                        task.bytes_received >= DIRECTIONAL_MIN_BYTES:
+                    self.cost_model.observe_bandwidth(
+                        dst, src, task.bytes_received, task.down_s)
+                    directional = True
+                wire_total = task.bytes_sent + task.bytes_received
+                if not directional and task.seconds > 0 \
+                        and wire_total >= logical:
+                    # combined round-trip sample — but only when the
+                    # payload genuinely crossed: a dedup-shrunken ship
+                    # (refs instead of bytes) measures latency, not
+                    # bandwidth, and would poison the EMA
+                    self.cost_model.observe_bandwidth(
+                        src, dst, wire_total, task.seconds)
+        return out, owed
 
     def total_bytes_shipped(self) -> int:
         with self._lock:

@@ -1,42 +1,149 @@
-"""Pytree wire format + socket framing for the offload fabric.
+"""Content-addressed streaming wire format for the offload fabric.
 
 Workers must start fast, so this module imports only numpy + stdlib.
 A value is flattened by structural recursion (dict / list / tuple /
 namedtuple); array leaves — numpy arrays and anything array-protocol
 shaped such as ``jax.Array`` — are lifted out as raw contiguous byte
 buffers, and the remaining skeleton (containers, scalars, strings,
-``None``) is pickled. Frame layout:
+``None``) is pickled.
 
-    !4s  magic  b"EMW1"
-    !Q   skeleton pickle length
-    !I   buffer count
-    skeleton pickle
-    per buffer: !Q length + raw bytes
+The v1 format shipped each message as one monolithic frame that both
+ends held end-to-end (encode copied every buffer, the receiver read the
+whole payload into one blob, then copied it again into arrays). v2 is a
+**chunked, content-addressed stream**:
 
-``send_msg`` / ``recv_msg`` add an outer ``!Q`` length prefix so one
-socket carries a stream of self-delimiting frames. Both return the
-framed byte count so every cross-process movement is accounted — these
-counts are what ``RPCTransport`` feeds back into the cost model as
-observed wire bandwidth.
+  * every buffer is split into ``CHUNK_BYTES`` windows, each tagged with
+    a truncated SHA-256 digest;
+  * the header frame (skeleton pickle + per-buffer chunk manifest) goes
+    first, then each chunk streams as its own wire unit — the receiver
+    allocates the destination buffer up front and ``recv_into``s chunks
+    directly, so decode/install overlaps the remaining transfer and no
+    whole-payload intermediate copy ever exists;
+  * with a :class:`ChannelStore`, chunks the peer is known to hold are
+    sent as **digest references** instead of bytes — repeated payloads
+    (warm params, re-staged observations) become metadata-only;
+  * a reference to a digest the receiver does not hold, a digest
+    mismatch on an inline chunk, or a malformed header raise
+    :class:`WireError` immediately instead of desynchronising or
+    hanging the stream (callers treat it like a dead connection).
+
+Dedup bookkeeping never negotiates: each direction of a socket is an
+ordered stream, so the sender's record of what it has sent (``sent``)
+and the receiver's cache of what it has received (``received``) see the
+same chunk insertions in the same order and evict FIFO at the same cap —
+the sender's copy is an exact mirror of the receiver's, and a chunk is
+referenced only when the mirror still holds it. Cross-direction
+references (echoing back a value just received) resolve against the
+opposite store pair. A connection whose send was interrupted mid-plan
+must discard its stores (the broker kills the worker instead).
+
+``send_msg`` / ``recv_msg`` return the framed byte count so every
+cross-process movement is accounted — these counts are what
+``RPCTransport`` feeds back into the cost model as observed wire
+bandwidth, and with dedup they reflect the bytes that *actually*
+crossed, not the logical payload size.
 """
 from __future__ import annotations
 
+import hashlib
 import pickle
 import struct
-from dataclasses import dataclass
-from typing import Any, List, Tuple
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-MAGIC = b"EMW1"
-_HEAD = struct.Struct("!4sQI")
+MAGIC = b"EMW2"
+_HEAD = struct.Struct("!4sQ")        # magic + header pickle length
 _LEN = struct.Struct("!Q")
+
+CHUNK_BYTES = 1 << 20                # transfer/dedup granularity
+DIGEST_BYTES = 16                    # truncated sha256
+STORE_BYTES = 128 << 20              # per-direction chunk cache cap
+_MAX_HEADER = 1 << 31
+
+_INLINE, _REF = 0, 1
 
 
 class WireError(ValueError):
     pass
 
 
+def digest_of(data) -> bytes:
+    """Truncated SHA-256 of a bytes-like (OpenSSL-accelerated)."""
+    return hashlib.sha256(data).digest()[:DIGEST_BYTES]
+
+
+# ------------------------------------------------------------- chunk stores
+class ChunkStore:
+    """One direction's content-addressed chunk cache.
+
+    Mirrored FIFO: both endpoints of a socket direction insert the same
+    chunks in the same (stream) order and evict oldest-first at the same
+    byte cap, so a sender's ``sent`` store is an exact model of the
+    receiver's ``received`` store — a sender never references a chunk
+    the receiver has already evicted. Insertions never reorder (no LRU
+    touch), which is what keeps the two copies in lockstep.
+    """
+
+    def __init__(self, max_bytes: int = STORE_BYTES):
+        self.max_bytes = max_bytes
+        self._lock = threading.Lock()
+        self._chunks: "OrderedDict[bytes, bytes]" = OrderedDict()
+        self.bytes_held = 0
+        self.evicted = 0
+
+    def has(self, d: bytes) -> bool:
+        with self._lock:
+            return d in self._chunks
+
+    def get(self, d: bytes) -> Optional[bytes]:
+        with self._lock:
+            return self._chunks.get(d)
+
+    def add(self, d: bytes, data: bytes):
+        with self._lock:
+            if d in self._chunks:
+                return
+            self._chunks[d] = data
+            self.bytes_held += len(data)
+            while self.bytes_held > self.max_bytes and self._chunks:
+                _, old = self._chunks.popitem(last=False)
+                self.bytes_held -= len(old)
+                self.evicted += 1
+
+    def __len__(self):
+        with self._lock:
+            return len(self._chunks)
+
+
+class ChannelStore:
+    """Per-connection dedup state (one per socket endpoint).
+
+    ``sent`` mirrors what the peer has received from us; ``received``
+    holds what we received (and mirrors the peer's ``sent``). A sender
+    may reference any chunk present in either — the peer's pair holds
+    it — and a receiver resolves references against both.
+    """
+
+    def __init__(self, max_bytes: int = STORE_BYTES):
+        self.sent = ChunkStore(max_bytes)
+        self.received = ChunkStore(max_bytes)
+        self.dedup_chunks = 0        # chunks sent as refs
+        self.saved_bytes = 0         # payload bytes dedup kept off the wire
+
+    def known(self, d: bytes) -> bool:
+        return self.sent.has(d) or self.received.has(d)
+
+    def lookup(self, d: bytes) -> Optional[bytes]:
+        got = self.received.get(d)
+        return got if got is not None else self.sent.get(d)
+
+
+# ------------------------------------------------------------- tree <-> wire
 @dataclass(frozen=True)
 class _Buf:
     """Skeleton placeholder for an array leaf lifted into ``buffers``."""
@@ -54,10 +161,18 @@ def _is_foreign_array(obj) -> bool:
             and hasattr(obj, "shape"))
 
 
-def _strip(obj, buffers: List[bytes]):
+def _as_bytes_view(a: np.ndarray) -> memoryview:
+    """Flat byte view of a contiguous array — no copy on the happy path."""
+    try:
+        return memoryview(a.reshape(-1)).cast("B")
+    except (TypeError, ValueError):
+        return memoryview(a.tobytes())
+
+
+def _strip(obj, buffers: List[memoryview]):
     if isinstance(obj, np.ndarray) and obj.dtype != object:
         a = np.ascontiguousarray(obj)
-        buffers.append(a.tobytes())
+        buffers.append(_as_bytes_view(a))
         return _Buf(len(buffers) - 1, a.dtype.str, a.shape)
     if _is_foreign_array(obj):
         return _strip(np.asarray(obj), buffers)
@@ -71,10 +186,14 @@ def _strip(obj, buffers: List[bytes]):
     return obj
 
 
-def _fill(obj, buffers: List[bytes]):
+def _fill(obj, buffers: List[Any]):
     if isinstance(obj, _Buf):
-        arr = np.frombuffer(buffers[obj.idx], dtype=np.dtype(obj.dtype))
-        return arr.reshape(obj.shape).copy()   # copy -> writable
+        try:
+            arr = np.frombuffer(buffers[obj.idx], dtype=np.dtype(obj.dtype))
+            return arr.reshape(obj.shape)     # bytearray-backed -> writable
+        except (ValueError, TypeError) as e:
+            raise WireError(f"buffer {obj.idx} does not fit "
+                            f"{obj.dtype}{obj.shape}: {e}") from e
     if isinstance(obj, dict):
         return {k: _fill(v, buffers) for k, v in obj.items()}
     if isinstance(obj, tuple):
@@ -85,36 +204,81 @@ def _fill(obj, buffers: List[bytes]):
     return obj
 
 
-def encode(value: Any) -> bytes:
-    buffers: List[bytes] = []
+# ------------------------------------------------------------ send planning
+@dataclass
+class MsgPlan:
+    """A fully planned message: wire parts + byte accounting.
+
+    Planning marks referenced/sent chunks in the store, so a plan MUST be
+    sent (or the connection's stores discarded) — the broker plans, stamps
+    its byte counters, then streams, and kills the worker on any error.
+    """
+    parts: List[Any]                 # bytes / memoryview, sendall in order
+    nbytes: int                      # bytes that will cross the wire
+    payload_bytes: int               # logical size (before dedup)
+    saved_bytes: int                 # payload bytes elided as refs
+    _keepalive: List[Any] = field(default_factory=list)
+
+    def send(self, sock):
+        for p in self.parts:
+            sock.sendall(p)
+
+
+def plan_msg(value: Any, store: Optional[ChannelStore] = None,
+             chunk_bytes: int = CHUNK_BYTES) -> MsgPlan:
+    buffers: List[memoryview] = []
     skeleton = _strip(value, buffers)
-    meta = pickle.dumps(skeleton, protocol=pickle.HIGHEST_PROTOCOL)
-    parts = [_HEAD.pack(MAGIC, len(meta), len(buffers)), meta]
-    for b in buffers:
-        parts.append(_LEN.pack(len(b)))
-        parts.append(b)
-    return b"".join(parts)
+    manifests: List[List[Tuple[Optional[bytes], int, int]]] = []
+    chunk_parts: List[memoryview] = []
+    saved = 0
+    for mv in buffers:
+        entries: List[Tuple[Optional[bytes], int, int]] = []
+        n = mv.nbytes
+        for off in range(0, n, chunk_bytes):
+            piece = mv[off:off + chunk_bytes]
+            if store is not None:
+                d = digest_of(piece)
+                if store.known(d):
+                    entries.append((d, len(piece), _REF))
+                    saved += len(piece)
+                    continue
+                store.sent.add(d, bytes(piece))
+                entries.append((d, len(piece), _INLINE))
+            else:
+                entries.append((None, len(piece), _INLINE))
+            chunk_parts.append(piece)
+        manifests.append(entries)
+    header = pickle.dumps(
+        {"skel": skeleton, "chunks": manifests, "dedup": store is not None},
+        protocol=pickle.HIGHEST_PROTOCOL)
+    parts: List[Any] = [_HEAD.pack(MAGIC, len(header)), header]
+    parts.extend(chunk_parts)
+    inline = sum(len(p) for p in chunk_parts)
+    payload = _HEAD.size + len(header) + inline + saved
+    if store is not None and saved:
+        store.dedup_chunks += sum(1 for ents in manifests
+                                  for (_, _, m) in ents if m == _REF)
+        store.saved_bytes += saved
+    return MsgPlan(parts, _HEAD.size + len(header) + inline, payload, saved,
+                   _keepalive=buffers)
 
 
-def decode(data: bytes) -> Any:
-    if len(data) < _HEAD.size:
-        raise WireError(f"short frame: {len(data)} bytes")
-    magic, meta_len, nbuf = _HEAD.unpack_from(data, 0)
-    if magic != MAGIC:
-        raise WireError(f"bad magic {magic!r}")
-    off = _HEAD.size
-    skeleton = pickle.loads(data[off:off + meta_len])
-    off += meta_len
-    buffers: List[bytes] = []
-    for _ in range(nbuf):
-        (blen,) = _LEN.unpack_from(data, off)
-        off += _LEN.size
-        buffers.append(data[off:off + blen])
-        off += blen
-    return _fill(skeleton, buffers)
+def send_msg(sock, value: Any, store: Optional[ChannelStore] = None) -> int:
+    """Stream ``value`` as header + chunk frames; returns wire bytes."""
+    plan = plan_msg(value, store)
+    plan.send(sock)
+    return plan.nbytes
 
 
-# ------------------------------------------------------------------ sockets
+def encode(value: Any, store: Optional[ChannelStore] = None,
+           chunk_bytes: int = CHUNK_BYTES) -> bytes:
+    """One-shot encode (the full wire stream as a single bytes)."""
+    plan = plan_msg(value, store, chunk_bytes)
+    return b"".join(bytes(p) if not isinstance(p, bytes) else p
+                    for p in plan.parts)
+
+
+# ----------------------------------------------------------------- receiving
 def _recvall(sock, n: int) -> bytes:
     buf = bytearray()
     while len(buf) < n:
@@ -125,21 +289,148 @@ def _recvall(sock, n: int) -> bytes:
     return bytes(buf)
 
 
-def frame(value: Any) -> bytes:
-    """Encode ``value`` with the outer length prefix, ready to sendall."""
-    data = encode(value)
-    return _LEN.pack(len(data)) + data
+def _recvall_into(sock, mv: memoryview):
+    while len(mv):
+        r = sock.recv_into(mv)
+        if r == 0:
+            raise EOFError("socket closed mid-chunk")
+        mv = mv[r:]
 
 
-def send_msg(sock, value: Any) -> int:
-    """Frame + send ``value``; returns total bytes put on the wire."""
-    data = frame(value)
-    sock.sendall(data)
-    return len(data)
+class _BytesSource:
+    """Adapter so decode-from-bytes shares the streaming parser."""
+
+    def __init__(self, data):
+        self.data = memoryview(data)
+        self.off = 0
+
+    def take(self, n: int) -> bytes:
+        if self.off + n > len(self.data):
+            raise WireError(f"short frame: wanted {n} more bytes")
+        out = bytes(self.data[self.off:self.off + n])
+        self.off += n
+        return out
+
+    def take_into(self, mv: memoryview):
+        n = len(mv)
+        if self.off + n > len(self.data):
+            raise WireError(f"short frame: wanted {n} more bytes")
+        mv[:] = self.data[self.off:self.off + n]
+        self.off += n
 
 
-def recv_msg(sock) -> Tuple[Any, int]:
-    """Receive one frame; returns ``(value, total_bytes_read)``."""
-    (n,) = _LEN.unpack(_recvall(sock, _LEN.size))
-    data = _recvall(sock, n)
-    return decode(data), _LEN.size + n
+class _SockSource:
+    def __init__(self, sock):
+        self.sock = sock
+
+    def take(self, n: int) -> bytes:
+        return _recvall(self.sock, n)
+
+    def take_into(self, mv: memoryview):
+        _recvall_into(self.sock, mv)
+
+
+def _read_msg(src, store: Optional[ChannelStore]) -> Tuple[Any, int]:
+    return _read_body(src.take(_HEAD.size), src, store)
+
+
+def _read_body(head: bytes, src, store: Optional[ChannelStore]
+               ) -> Tuple[Any, int]:
+    magic, hlen = _HEAD.unpack(head)
+    if magic != MAGIC:
+        raise WireError(f"bad magic {magic!r}")
+    if hlen > _MAX_HEADER:
+        raise WireError(f"implausible header length {hlen}")
+    try:
+        meta = pickle.loads(src.take(hlen))
+        skeleton = meta["skel"]
+        manifests = meta["chunks"]
+        dedup = bool(meta.get("dedup"))
+    except WireError:
+        raise
+    except Exception as e:
+        raise WireError(f"undecodable header: {e!r}") from e
+    nread = _HEAD.size + hlen
+    buffers: List[bytearray] = []
+    for entries in manifests:
+        total = sum(ln for _, ln, _ in entries)
+        buf = bytearray(total)
+        mv = memoryview(buf)
+        off = 0
+        for d, ln, mode in entries:
+            dest = mv[off:off + ln]
+            if mode == _INLINE:
+                src.take_into(dest)
+                nread += ln
+                if d is not None:
+                    if digest_of(dest) != d:
+                        raise WireError(
+                            f"chunk digest mismatch at offset {off} "
+                            f"({ln} bytes): corrupted frame")
+                    if dedup and store is not None:
+                        store.received.add(d, bytes(dest))
+            elif mode == _REF:
+                data = store.lookup(d) if store is not None else None
+                if data is None or len(data) != ln:
+                    raise WireError(
+                        f"reference to unknown chunk digest {d!r:.20} "
+                        f"({ln} bytes): peer/receiver stores desynced")
+                dest[:] = data
+            else:
+                raise WireError(f"unknown chunk mode {mode!r}")
+            off += ln
+        buffers.append(buf)
+    return _fill(skeleton, buffers), nread
+
+
+def recv_msg(sock, store: Optional[ChannelStore] = None,
+             stats: Optional[Dict[str, float]] = None) -> Tuple[Any, int]:
+    """Receive one message; returns ``(value, wire_bytes_read)``.
+
+    With ``stats`` (a dict), fills ``recv_s`` — the wall time from the
+    header's arrival to the last chunk, i.e. transfer time excluding the
+    idle wait for the message to start. Workers report it back so the
+    broker can attribute round-trip time per direction.
+    """
+    src = _SockSource(sock)
+    head = src.take(_HEAD.size)       # blocks idle until a message starts
+    t0 = time.perf_counter()
+    value, nread = _read_body(head, src, store)
+    if stats is not None:
+        stats["recv_s"] = time.perf_counter() - t0
+        stats["wire_bytes"] = nread
+    return value, nread
+
+
+def decode(data, store: Optional[ChannelStore] = None) -> Any:
+    value, _ = _read_msg(_BytesSource(data), store)
+    return value
+
+
+# --------------------------------------------------------------- manifests
+def manifest_of(value: Any, chunk_bytes: int = CHUNK_BYTES
+                ) -> Tuple[bytes, List[Tuple[bytes, int]]]:
+    """``(content_digest, [(chunk_digest, length), ...])`` of a value.
+
+    The chunk list is what a content-addressed store indexes (which
+    chunks are resident where); the content digest — skeleton pickle +
+    chunk digests — identifies the whole value for step memoization.
+    """
+    buffers: List[memoryview] = []
+    skeleton = _strip(value, buffers)
+    h = hashlib.sha256(pickle.dumps(skeleton,
+                                    protocol=pickle.HIGHEST_PROTOCOL))
+    chunks: List[Tuple[bytes, int]] = []
+    for mv in buffers:
+        n = mv.nbytes
+        for off in range(0, n, chunk_bytes):
+            piece = mv[off:off + chunk_bytes]
+            d = digest_of(piece)
+            chunks.append((d, len(piece)))
+            h.update(d)
+    return h.digest()[:DIGEST_BYTES], chunks
+
+
+def content_digest(value: Any) -> bytes:
+    """Digest identifying a value's full content (structure + bytes)."""
+    return manifest_of(value)[0]

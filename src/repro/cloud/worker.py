@@ -6,8 +6,18 @@ serves tasks one at a time over the socket:
   * ``task``  — resolve the step fn (registry name or pickled function),
     execute with decoded kwargs, reply ``result`` or ``error``;
   * ``ship``  — echo the payload back (the RPCTransport byte-movement
-    primitive: the value really crosses the process boundary both ways);
+    primitive: the value really crosses the process boundary both ways —
+    though with chunk dedup the echo direction is typically metadata-only,
+    the broker having just sent those very chunks);
   * ``shutdown`` — exit cleanly.
+
+The socket carries the content-addressed chunk stream (wire.py): unless
+started with ``--no-dedup`` the worker keeps a :class:`ChannelStore`
+mirroring the broker's, so repeated payload chunks (the same params in
+every task's kwargs) arrive as digest references. Each reply also
+carries ``req_recv_s`` (how long the request took to stream in) and
+``work_s`` (execution time), letting the broker attribute the round
+trip per direction — the feed for asymmetric-link bandwidth estimates.
 
 A daemon thread emits heartbeats on an interval so the broker can tell a
 hung or SIGKILLed worker from a slow one. Imports are numpy + stdlib
@@ -22,22 +32,25 @@ import os
 import pickle
 import socket
 import threading
+import time
 import traceback
 
 from repro.cloud import tasklib
-from repro.cloud.wire import recv_msg, send_msg
+from repro.cloud.wire import ChannelStore, WireError, recv_msg, send_msg
 
 
-def serve(host: str, port: int, worker_id: str, init_modules, heartbeat_s: float):
+def serve(host: str, port: int, worker_id: str, init_modules, heartbeat_s: float,
+          dedup: bool = True):
     for mod in init_modules:
         if mod:
             importlib.import_module(mod)
     sock = socket.create_connection((host, port))
     sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    store = ChannelStore() if dedup else None
     send_lock = threading.Lock()
     with send_lock:
         send_msg(sock, {"op": "hello", "worker_id": worker_id,
-                        "pid": os.getpid()})
+                        "pid": os.getpid()}, store)
 
     stop = threading.Event()
 
@@ -45,7 +58,8 @@ def serve(host: str, port: int, worker_id: str, init_modules, heartbeat_s: float
         while not stop.wait(heartbeat_s):
             try:
                 with send_lock:
-                    send_msg(sock, {"op": "heartbeat", "worker_id": worker_id})
+                    send_msg(sock, {"op": "heartbeat",
+                                    "worker_id": worker_id}, store)
             except OSError:
                 return
 
@@ -53,13 +67,18 @@ def serve(host: str, port: int, worker_id: str, init_modules, heartbeat_s: float
 
     try:
         while True:
+            stats: dict = {}
             try:
-                msg, _ = recv_msg(sock)
-            except (EOFError, OSError):
+                msg, _ = recv_msg(sock, store, stats=stats)
+            except (EOFError, OSError, WireError):
+                # WireError: corrupted frame / desynced stores — the
+                # stream is unrecoverable; exiting lets the broker's
+                # death path requeue the in-flight task cleanly
                 break
             op = msg.get("op")
             if op == "shutdown":
                 break
+            t0 = time.perf_counter()
             if op == "ship":
                 reply = {"op": "result", "task_id": msg["task_id"],
                          "value": msg.get("value")}
@@ -68,9 +87,11 @@ def serve(host: str, port: int, worker_id: str, init_modules, heartbeat_s: float
             else:
                 reply = {"op": "error", "task_id": msg.get("task_id", -1),
                          "error": f"unknown op {op!r}"}
+            reply["req_recv_s"] = stats.get("recv_s", 0.0)
+            reply["work_s"] = time.perf_counter() - t0
             try:
                 with send_lock:
-                    send_msg(sock, reply)
+                    send_msg(sock, reply, store)
             except OSError:
                 break
     finally:
@@ -99,10 +120,12 @@ def main(argv=None):
     ap.add_argument("--init", default="repro.cloud.tasklib",
                     help="comma-separated modules to import at startup")
     ap.add_argument("--heartbeat", type=float, default=0.25)
+    ap.add_argument("--no-dedup", action="store_true",
+                    help="disable chunk dedup (must match the broker)")
     args = ap.parse_args(argv)
     host, port = args.connect.rsplit(":", 1)
     serve(host, int(port), args.worker_id, args.init.split(","),
-          args.heartbeat)
+          args.heartbeat, dedup=not args.no_dedup)
 
 
 if __name__ == "__main__":

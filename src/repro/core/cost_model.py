@@ -24,7 +24,20 @@ Step FLOP/byte statistics come from three sources, best-first:
 Link bandwidth likewise prefers measurement over constants: the offload
 fabric's RPCTransport reports every real transfer via
 ``observe_bandwidth`` and ``transfer_time`` uses that EMA when present,
-falling back to the tier's static link table otherwise.
+falling back to the tier's static link table otherwise. Samples are
+keyed **per direction** — large fabric ships report the request and
+reply legs separately (worker-measured receive time vs the remainder),
+so an asymmetric up/down WAN link shows up as different
+``measured_bw[(local, cloud)]`` and ``measured_bw[(cloud, local)]``
+entries and ``placement_cost`` charges each stale input at the
+bandwidth of the link it would actually cross, in the direction it
+would cross it.
+
+Staleness is content-aware: ``MDSS.staleness`` counts only chunks not
+already resident at the destination tier (dedup by digest), so
+``placement_cost`` charges only *non-resident, non-duplicate* bytes —
+staging a value whose content another namespace already holds there is
+modeled (and shipped) as free.
 """
 from __future__ import annotations
 

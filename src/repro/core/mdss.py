@@ -28,6 +28,18 @@ URI-keyed, versioned, multi-tier data store:
     outputs while warm cross-run data (params, observations) is stored —
     and stays cloud-resident — exactly once. ``drop_namespace`` is run
     teardown: it frees every replica the run published,
+  * **content addressing** (chunk dedup): every replica install registers
+    its value's chunk digests (``wire.manifest_of``) in a per-tier chunk
+    index carrying the same incremental residency accounting as the
+    byte counters; ``staleness``/``stale_bytes`` then charge only chunks
+    NOT already resident on the destination tier — a second tenant
+    staging content-identical inputs (same params under another
+    namespace, a re-upload after eviction) owes **zero** transfer bytes,
+    and the locality scorer (``CostModel.placement_cost``) sees exactly
+    that. A transport exposing ``transfer_ex`` (the fabric's
+    RPCTransport) ships metadata only for fully-resident values;
+    ``content_digest(uri)`` is the whole-value identity the runtime's
+    cross-run step memoization keys on,
   * **residency budgets** (per namespace, per tier): resident bytes are
     accounted incrementally on every copy install/replace/delete, and
     ``set_namespace_budget(ns, tier, max_bytes)`` bounds a namespace's
@@ -49,12 +61,15 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+from collections import OrderedDict
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.cloud.wire import manifest_of
 
 
 class MDSSTransferError(RuntimeError):
@@ -102,10 +117,17 @@ class _Entry:
 
 class MDSS:
     def __init__(self, tiers, transport: Optional[Transport] = None,
-                 cost_model=None, capacity_bytes: Optional[int] = None):
+                 cost_model=None, capacity_bytes: Optional[int] = None,
+                 chunk_dedup: bool = True):
         self.tiers = tiers
         self.transport = transport or Transport(tiers)
         self.cost_model = cost_model
+        # content-addressed residency: replica installs register chunk
+        # digests per tier, and transfer obligations charge only chunks
+        # not already resident at the destination (values are treated as
+        # immutable once stored — mutating a stored array in place would
+        # stale its cached manifest)
+        self.chunk_dedup = chunk_dedup
         # store-wide resident-byte ceiling; the runtime's admission
         # control refuses new submissions when residency nears it
         self.capacity_bytes = capacity_bytes
@@ -149,18 +171,33 @@ class MDSS:
         self.evictions: int = 0
         self.eviction_bytes: int = 0       # cumulative churn (autoscaler feed)
         self.eviction_events: list = []    # bounded like sync_events
+        # per-tier chunk index: digest -> [refcount, length]. Kept in
+        # lockstep with ``copies`` by _set_copy/_del_copy, same as the
+        # residency byte counters — chunks leave the index exactly when
+        # the last replica referencing them leaves the tier (eviction,
+        # drop_namespace, overwrite)
+        self._tier_chunks: Dict[str, Dict[bytes, list]] = {}
+        self._manifest_cache: "OrderedDict[Tuple[str, int], tuple]" = \
+            OrderedDict()
+        self.manifest_cache_cap = 4096
+        self.dedup_bytes_elided: int = 0   # transfer bytes chunk-dedup saved
 
     # ------------------------------------------------------------------ api
     def put(self, uri: str, value, tier: str = "local",
-            expect_version: Optional[int] = None):
+            expect_version: Optional[int] = None, _manifest=None):
         """New version written on ``tier`` (local-first semantics).
 
         With ``expect_version`` the put is a fenced write: it succeeds only
         if the entry is still at that version (compare-and-bump under the
         store lock). A stale writer — e.g. a speculation loser finishing
         after the winner already published — gets ``None`` back and the
-        entry is untouched.
+        entry is untouched. ``_manifest`` lets batch callers pre-hash the
+        value's chunk manifest outside the store lock.
         """
+        if _manifest is None and self.chunk_dedup:
+            # hash before taking the lock (re-entrant callers that
+            # already hold it pay under the lock, same as before)
+            _manifest = manifest_of(value)
         with self._lock:
             e = self._entries.setdefault(uri, _Entry())
             if expect_version is not None and e.version != expect_version:
@@ -168,8 +205,16 @@ class MDSS:
                 return None
             e.version += 1
             e.writer = tier
+            if _manifest is not None:
+                self._cache_manifest((uri, e.version), _manifest)
             self._set_copy(uri, e, tier, e.version, value)
             return e.version
+
+    def _premanifests(self, values: Dict[str, Any]) -> Dict[str, tuple]:
+        """Hash a batch's manifests with NO lock held (for put_many)."""
+        if not self.chunk_dedup:
+            return {}
+        return {uri: manifest_of(val) for uri, val in values.items()}
 
     def put_many(self, values: Dict[str, Any], tier: str = "local",
                  expect_versions: Optional[Dict[str, int]] = None):
@@ -183,16 +228,33 @@ class MDSS:
         (no longer) exists is a stale expectation and fences the batch —
         e.g. the entry was dropped with its namespace mid-execution.
         """
+        if expect_versions is not None:
+            # cheap pre-check before paying the batch hash: a fenced
+            # publish (speculation loser) is a designed-common event and
+            # must not burn SHA-256 over outputs it will then discard.
+            # The authoritative check re-runs under the same lock hold
+            # as the writes.
+            with self._lock:
+                if self._fence_stale(values, expect_versions):
+                    self.fenced_puts += 1
+                    return None
+        pre = self._premanifests(values)
         with self._lock:
-            if expect_versions is not None:
-                for uri in values:
-                    e = self._entries.get(uri)
-                    cur = 0 if e is None else e.version
-                    if cur != expect_versions.get(uri, 0):
-                        self.fenced_puts += 1
-                        return None
-            return {uri: self.put(uri, val, tier)
+            if expect_versions is not None \
+                    and self._fence_stale(values, expect_versions):
+                self.fenced_puts += 1
+                return None
+            return {uri: self.put(uri, val, tier, _manifest=pre.get(uri))
                     for uri, val in values.items()}
+
+    def _fence_stale(self, values, expect_versions) -> bool:
+        """Lock held: True if any entry moved past its expected version."""
+        for uri in values:
+            e = self._entries.get(uri)
+            cur = 0 if e is None else e.version
+            if cur != expect_versions.get(uri, 0):
+                return True
+        return False
 
     def version(self, uri: str) -> int:
         e = self._entries.get(uri)
@@ -228,7 +290,16 @@ class MDSS:
         """Per-URI transfer obligation of placing a reader on ``tier``:
         ``(uri, freshest_src_tier, nbytes)`` for every entry whose latest
         version is NOT already resident there. The locality scheduler
-        turns this into modeled transfer seconds per candidate tier."""
+        turns this into modeled transfer seconds per candidate tier.
+
+        With chunk dedup, ``nbytes`` counts only the chunks the
+        destination tier does not already hold under ANY entry — staging
+        content-identical data (another tenant's copy of the same
+        params, a re-upload after eviction) owes nothing, which is
+        exactly what ``CostModel.placement_cost`` should charge.
+        """
+        uris = list(uris)
+        self._warm_manifests(uris)          # hash misses outside the lock
         out: List[Tuple[str, str, int]] = []
         with self._lock:
             for uri in uris:
@@ -236,8 +307,15 @@ class MDSS:
                 if e is None or self.has_latest(uri, tier):
                     continue
                 src = self._freshest_tier(e)
-                if src is not None:
-                    out.append((uri, src, nbytes_of(e.copies[src][1])))
+                if src is None:
+                    continue
+                version, value = e.copies[src]
+                if self.chunk_dedup:
+                    chunks = self._manifest_for(uri, version, value)[1]
+                    n = self._missing_chunk_bytes(tier, chunks)
+                else:
+                    n = nbytes_of(value)
+                out.append((uri, src, n))
         return out
 
     def get(self, uri: str, tier: str = "local"):
@@ -264,6 +342,7 @@ class MDSS:
     def _ensure_one(self, uri: str, tier: str) -> int:
         moved = 0
         expired_waits = 0
+        self._warm_manifests([uri])         # hash misses outside the lock
         while True:
             peer = None
             with self._lock:
@@ -280,6 +359,12 @@ class MDSS:
                         raise KeyError(f"{uri}: no replica anywhere")
                     snap_version = e.version
                     value = e.copies[src][1]
+                    if self.chunk_dedup:
+                        chunks = self._manifest_for(
+                            uri, snap_version, value)[1]
+                        missing = self._missing_chunk_bytes(tier, chunks)
+                    else:
+                        chunks, missing = None, None
                     flight = threading.Event()
                     self._inflight[(uri, tier)] = flight
             if peer is not None:
@@ -299,9 +384,22 @@ class MDSS:
                             f"{self.transfer_wait_s}s waits")
                 continue
             try:
-                # wire movement with no lock held
-                shipped = self.transport.transfer(value, src, tier)
-                n = nbytes_of(shipped)
+                # wire movement with no lock held. A chunk-aware
+                # transport (transfer_ex) ships only non-resident chunks
+                # — a fully-resident value is a metadata-only round trip
+                # — and reports the bytes it actually owed; the default
+                # transport is charged the same dedup-aware obligation.
+                transfer_ex = getattr(self.transport, "transfer_ex", None)
+                if transfer_ex is not None:
+                    shipped, n = transfer_ex(value, src, tier,
+                                             chunks=chunks,
+                                             missing_bytes=missing)
+                else:
+                    shipped = self.transport.transfer(value, src, tier)
+                    n = nbytes_of(shipped) if missing is None else missing
+                if missing is not None:
+                    self.dedup_bytes_elided += \
+                        max(nbytes_of(shipped) - n, 0)
                 with self._lock:
                     e = self._entries.get(uri)
                     if e is None:
@@ -393,6 +491,101 @@ class MDSS:
     def _touch(self, uri: str, tier: str):
         self._last_used[(uri, tier)] = next(self._use_tick)
 
+    # ------------------------------------------------- content addressing
+    def _manifest_for(self, uri: str, version: int, value):
+        """(content_digest, [(chunk_digest, length), ...]) of a stored
+        value, cached per (uri, version) — lock held. Hashing happens
+        once per version however many tiers the replica reaches; the
+        public put paths pre-hash OUTSIDE the lock and seed this cache,
+        so a multi-MB publish does not stall other tenants' store ops."""
+        key = (uri, version)
+        got = self._manifest_cache.get(key)
+        if got is not None:
+            self._manifest_cache.move_to_end(key)
+            return got
+        mani = manifest_of(value)
+        self._cache_manifest(key, mani)
+        return mani
+
+    def _cache_manifest(self, key, mani):
+        self._manifest_cache[key] = mani
+        while len(self._manifest_cache) > self.manifest_cache_cap:
+            self._manifest_cache.popitem(last=False)
+
+    def _warm_manifests(self, uris):
+        """Hash any manifest-cache misses for ``uris``' freshest replicas
+        with NO lock held, then seed the cache. The read paths
+        (staleness, content_digest, ensure) call this first so their
+        under-lock work is dict lookups, not SHA-256 of multi-MB values
+        — a racing version bump can still miss and hash under the lock,
+        but that is the rare case, not the steady state."""
+        if not self.chunk_dedup:
+            return
+        with self._lock:
+            todo = []
+            for uri in uris:
+                e = self._entries.get(uri)
+                if e is None:
+                    continue
+                src = self._freshest_tier(e)
+                if src is None:
+                    continue
+                version, value = e.copies[src]
+                if (uri, version) not in self._manifest_cache:
+                    todo.append((uri, version, value))
+        if not todo:
+            return
+        hashed = [(u, v, manifest_of(val)) for u, v, val in todo]
+        with self._lock:
+            for u, v, mani in hashed:
+                if (u, v) not in self._manifest_cache:
+                    self._cache_manifest((u, v), mani)
+
+    def _chunks_retain(self, tier: str, uri: str, version: int, value):
+        idx = self._tier_chunks.setdefault(tier, {})
+        for d, ln in self._manifest_for(uri, version, value)[1]:
+            ent = idx.get(d)
+            if ent is None:
+                idx[d] = [1, ln]
+            else:
+                ent[0] += 1
+
+    def _chunks_release(self, tier: str, uri: str, version: int, value):
+        idx = self._tier_chunks.get(tier)
+        if idx is None:
+            return
+        for d, _ in self._manifest_for(uri, version, value)[1]:
+            ent = idx.get(d)
+            if ent is not None:
+                ent[0] -= 1
+                if ent[0] <= 0:
+                    del idx[d]
+
+    def _missing_chunk_bytes(self, tier: str, chunks) -> int:
+        """Bytes of ``chunks`` not resident on ``tier`` — lock held."""
+        idx = self._tier_chunks.get(tier, {})
+        return sum(ln for d, ln in chunks if d not in idx)
+
+    def tier_chunk_stats(self, tier: str) -> Tuple[int, int]:
+        """(distinct chunks, deduped bytes) resident on ``tier``."""
+        with self._lock:
+            idx = self._tier_chunks.get(tier, {})
+            return len(idx), sum(ln for _, ln in idx.values())
+
+    def content_digest(self, uri: str) -> bytes:
+        """Digest identifying the freshest replica's full content — the
+        identity cross-run step memoization keys on."""
+        self._warm_manifests([uri])
+        with self._lock:
+            e = self._entries.get(uri)
+            if e is None:
+                raise KeyError(uri)
+            src = self._freshest_tier(e)
+            if src is None:
+                raise KeyError(f"{uri}: no fresh replica anywhere")
+            version, value = e.copies[src]
+            return self._manifest_for(uri, version, value)[0]
+
     def _set_copy(self, uri: str, e: _Entry, tier: str, version: int, value):
         """Install/replace ``tier``'s copy (lock held) keeping the
         incremental resident-byte counters and LRU clock current, and
@@ -403,9 +596,13 @@ class MDSS:
         if old is not None:
             self._ns_tier_bytes[key] = \
                 self._ns_tier_bytes.get(key, 0) - nbytes_of(old[1])
+            if self.chunk_dedup:
+                self._chunks_release(tier, uri, old[0], old[1])
         e.copies[tier] = (version, value)
         self._ns_tier_bytes[key] = \
             self._ns_tier_bytes.get(key, 0) + nbytes_of(value)
+        if self.chunk_dedup:
+            self._chunks_retain(tier, uri, version, value)
         self._touch(uri, tier)
         self._maybe_schedule_eviction(*key)
 
@@ -414,6 +611,8 @@ class MDSS:
         old = e.copies.pop(tier, None)
         if old is None:
             return 0
+        if self.chunk_dedup:
+            self._chunks_release(tier, uri, old[0], old[1])
         n = nbytes_of(old[1])
         key = (namespace_of(uri), tier)
         left = self._ns_tier_bytes.get(key, 0) - n
@@ -603,6 +802,14 @@ class MDSS:
                 for t in list(e.copies):
                     freed += self._del_copy(u, e, t)
                 del self._entries[u]
+            # purge the dropped URIs' cached manifests (AFTER the
+            # deletions — _del_copy's chunk release re-warms them): a
+            # reused namespace restarts versions at 1, and a stale
+            # (uri, version) hit would hand the OLD content's digest to
+            # new data — wrong memo keys, wrong residency pricing
+            dead = set(doomed)
+            for key in [k for k in self._manifest_cache if k[0] in dead]:
+                del self._manifest_cache[key]
             self._ns_epoch[ns] = self._ns_epoch.get(ns, 0) + 1
             for key in [k for k in self._budgets if k[0] == ns]:
                 del self._budgets[key]
@@ -675,11 +882,17 @@ class NamespacedMDSS:
             expect_version: Optional[int] = None):
         if expect_version is None:
             return self.base.put(self._wkey(uri), value, tier)
+        with self.base._lock:           # pre-check before paying the hash
+            if self.version(uri) != expect_version:
+                self.base.fenced_puts += 1
+                return None
+        mani = manifest_of(value) if self.base.chunk_dedup else None
         with self.base._lock:
             if self.version(uri) != expect_version:
                 self.base.fenced_puts += 1
                 return None
-            return self.base.put(self._wkey(uri), value, tier)
+            return self.base.put(self._wkey(uri), value, tier,
+                                 _manifest=mani)
 
     def fence_tokens(self, uris) -> Dict[str, Tuple[str, int, int]]:
         """Snapshot (resolved key, version, namespace epoch) per URI for
@@ -703,30 +916,46 @@ class NamespacedMDSS:
         :meth:`fence_tokens` tuples (compared against resolution, version
         AND namespace epoch — required for correctness under shared-read
         fallback and namespace teardown)."""
+        if expect_versions is not None:
+            with self.base._lock:   # pre-check before paying the hash
+                if self._batch_stale(values, expect_versions):
+                    self.base.fenced_puts += 1
+                    return None
+        pre = self.base._premanifests(values)
         with self.base._lock:
-            if expect_versions is not None:
-                for uri in values:
-                    exp = expect_versions.get(uri, 0)
-                    if isinstance(exp, tuple):
-                        rkey, ver = exp[0], exp[1]
-                        cur = self._rkey(uri)
-                        stale = (cur != rkey
-                                 or self.base.version(cur) != ver
-                                 or (len(exp) > 2 and exp[2] !=
-                                     self.base._ns_epoch.get(self.ns, 0)))
-                    else:
-                        stale = self.version(uri) != exp
-                    if stale:
-                        self.base.fenced_puts += 1
-                        return None
-            return {uri: self.base.put(self._wkey(uri), val, tier)
+            if expect_versions is not None \
+                    and self._batch_stale(values, expect_versions):
+                self.base.fenced_puts += 1
+                return None
+            return {uri: self.base.put(self._wkey(uri), val, tier,
+                                       _manifest=pre.get(uri))
                     for uri, val in values.items()}
+
+    def _batch_stale(self, values, expect_versions) -> bool:
+        """Base lock held: True if any fence token no longer matches."""
+        for uri in values:
+            exp = expect_versions.get(uri, 0)
+            if isinstance(exp, tuple):
+                rkey, ver = exp[0], exp[1]
+                cur = self._rkey(uri)
+                stale = (cur != rkey
+                         or self.base.version(cur) != ver
+                         or (len(exp) > 2 and exp[2] !=
+                             self.base._ns_epoch.get(self.ns, 0)))
+            else:
+                stale = self.version(uri) != exp
+            if stale:
+                return True
+        return False
 
     def version(self, uri: str) -> int:
         return self.base.version(self._rkey(uri))
 
     def peek_latest(self, uri: str):
         return self.base.peek_latest(self._rkey(uri))
+
+    def content_digest(self, uri: str) -> bytes:
+        return self.base.content_digest(self._rkey(uri))
 
     def has_latest(self, uri: str, tier: str) -> bool:
         return self.base.has_latest(self._rkey(uri), tier)

@@ -26,13 +26,30 @@ different code never collide. Cost-model stats stay keyed by step name
 submission is pre-measured from the first one. ``execute`` accepts a
 per-run ``mdss`` view (namespace isolation) and a ``priority`` class that
 rides down to the fabric broker.
+
+Cross-run step memoization (opt-in: ``memoize=True`` on the manager /
+runtime, or ``memoizable=True`` per step): an execution is keyed by
+``(step code fingerprint, input content digests, output names)``. Two
+tenants submitting the identical step over content-identical inputs
+share ONE execution — the second publishes the first's host-snapshot
+outputs into its own namespace (a fenced put, zero staging, zero wire
+bytes) instead of re-running; a tenant arriving while the first is
+still executing waits on it rather than racing. Only safe for
+deterministic, side-effect-free steps — a memoized result is reused
+whenever code and input *content* match, regardless of namespace, run,
+or wall-clock; steps that read clocks, RNGs, or external state must
+leave memoization off (``memoizable=False`` overrides a manager-wide
+``memoize=True``).
 """
 from __future__ import annotations
 
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
 
 import jax
 
@@ -91,16 +108,45 @@ class OffloadReport:
     staged_s: float = 0.0           # wall time spent staging inputs — the
                                     # observed counterpart of the locality
                                     # scheduler's modeled transfer score
+    memo_hit: bool = False          # reused a memoized execution: the step
+                                    # fn never ran and nothing was staged
+
+
+class _MemoEntry:
+    """One memoized execution: in-flight until ``event`` fires, then
+    either ``outputs`` (host snapshots) or ``error``. ``pin`` holds a
+    strong reference to the step's fn for id-keyed code keys — without
+    it a GC'd closure's recycled object id could collide a LATER,
+    different function into this entry's key (the compile cache pins its
+    fn the same way, implicitly, by caching it)."""
+    __slots__ = ("event", "outputs", "error", "nbytes", "pin")
+
+    def __init__(self, pin=None):
+        self.event = threading.Event()
+        self.outputs: Optional[Dict[str, Any]] = None
+        self.error: Optional[BaseException] = None
+        self.nbytes = 0
+        self.pin = pin
 
 
 class MigrationManager:
     def __init__(self, tiers: Dict[str, Tier], mdss: MDSS,
                  cost_model: Optional[CostModel] = None,
-                 remote_timeout_s: float = 120.0):
+                 remote_timeout_s: float = 120.0, memoize: bool = False):
         self.tiers = tiers
         self.mdss = mdss
         self.cost_model = cost_model or CostModel(tiers)
         self.remote_timeout_s = remote_timeout_s
+        # cross-run memoization (see module docstring): default-off
+        # manager-wide, overridable per step via Step.memoizable
+        self.memoize = memoize
+        self.memo_cap = 128                  # entries
+        self.memo_cap_bytes = 256 << 20      # pinned host snapshots
+        self._memo: "OrderedDict[Tuple, _MemoEntry]" = OrderedDict()
+        self._memo_bytes = 0
+        self._memo_lock = threading.Lock()
+        self.memo_hits = 0
+        self.memo_waits = 0
         # LRU-bounded: a long-lived runtime sees unboundedly many step
         # objects (fresh closures per tenant submission key by id), and a
         # cache entry pins its fn plus captured state — cap, don't grow
@@ -156,7 +202,8 @@ class MigrationManager:
 
     # -------------------------------------------------------------- execute
     def execute(self, step: Step, tier_name: str, *, mdss=None,
-                priority: int = 0) -> OffloadReport:
+                priority: int = 0,
+                memoize: Optional[bool] = None) -> OffloadReport:
         """Run ``step`` on ``tier_name``; inputs/outputs through MDSS.
 
         When the tier is fabric-backed (``tier.worker_pool``) and the step
@@ -171,8 +218,122 @@ class MigrationManager:
         ``priority`` is the fabric dispatch class: the broker serves
         higher classes first, so an interactive run's tasks overtake a
         batch run's queued work.
+
+        When the step is memoizable (manager ``memoize`` / step
+        ``memoizable``) the execution is shared across runs by content
+        key: a hit publishes the memoized host snapshots into THIS run's
+        namespace (fenced, zero staging) and reports ``memo_hit=True``.
+        ``memoize=False`` forces this one execution uncached — how a
+        speculation backup races its twin for real instead of becoming a
+        waiter on the twin's own in-flight memo entry.
         """
         mdss = self.mdss if mdss is None else mdss
+        key = self._memo_key(step, mdss, memoize)
+        if key is None:
+            return self._execute_now(step, tier_name, mdss, priority)[0]
+        return self._execute_memoized(step, tier_name, mdss, priority, key)
+
+    # ---------------------------------------------------------- memoization
+    def _memo_key(self, step: Step, mdss, override: Optional[bool] = None):
+        on = override
+        if on is None:
+            on = step.memoizable if step.memoizable is not None \
+                else self.memoize
+        if not on or not step.outputs:
+            return None
+        digest = getattr(mdss, "content_digest", None)
+        if digest is None:
+            return None
+        try:
+            in_digests = tuple((u, digest(u)) for u in step.inputs)
+        except KeyError:
+            return None      # an input is absent: not memoizable this run
+        return (step_code_key(step), in_digests, tuple(step.outputs))
+
+    def _execute_memoized(self, step: Step, tier_name: str, mdss,
+                          priority: int, key) -> "OffloadReport":
+        while True:
+            with self._memo_lock:
+                ent = self._memo.get(key)
+                owner = ent is None
+                if owner:
+                    ent = _MemoEntry(pin=step.fn)
+                    self._memo[key] = ent
+                    self._trim_memo()
+            if owner:
+                try:
+                    rep, out = self._execute_now(step, tier_name, mdss,
+                                                 priority)
+                except BaseException as e:
+                    with self._memo_lock:
+                        if self._memo.get(key) is ent:
+                            del self._memo[key]
+                    ent.error = e
+                    ent.event.set()
+                    raise
+                # host COPIES, never views: the owner's run published
+                # these same arrays into its namespace and hands them to
+                # its caller — a tenant mutating its fetched result must
+                # not corrupt the cache (a fenced publish still computed
+                # content valid for this input key, so it is kept)
+                ent.outputs = {k: jax.tree.map(lambda x: np.array(x), v)
+                               for k, v in out.items()}
+                ent.nbytes = sum(nbytes_of(v) for v in ent.outputs.values())
+                with self._memo_lock:
+                    if self._memo.get(key) is ent:
+                        self._memo_bytes += ent.nbytes
+                        self._trim_memo()
+                ent.event.set()
+                return rep
+            # an identical execution is in flight (or done) on another
+            # run: share it instead of re-running the step
+            self.memo_waits += 1
+            if not ent.event.wait(self.remote_timeout_s):
+                # owner wedged (or a speculation twin racing itself):
+                # degrade to an uncached execution, never deadlock
+                return self._execute_now(step, tier_name, mdss, priority)[0]
+            if ent.error is not None:
+                continue     # owner failed and removed the entry: take over
+            return self._publish_memoized(step, tier_name, mdss, ent)
+
+    def _publish_memoized(self, step: Step, tier_name: str, mdss,
+                          ent: _MemoEntry) -> "OffloadReport":
+        fence = getattr(mdss, "fence_tokens", None)
+        out_versions = fence(step.outputs) if fence is not None else \
+            {k: mdss.version(k) for k in step.outputs}
+        # each hit gets its own copies: N tenants sharing one execution
+        # must not alias one mutable array across their namespaces
+        published = mdss.put_many(
+            {k: jax.tree.map(lambda x: np.array(x), ent.outputs[k])
+             for k in step.outputs}, tier="local",
+            expect_versions=out_versions)
+        rep = OffloadReport(step.name, tier_name, 0.0, 0, 0,
+                            code_only=True, fenced=published is None,
+                            memo_hit=True)
+        with self._memo_lock:
+            self.memo_hits += 1
+        self.reports.append(rep)
+        if len(self.reports) > self.reports_cap:
+            del self.reports[:len(self.reports) - self.reports_cap]
+        return rep
+
+    def _trim_memo(self):
+        """Memo-lock held: drop oldest COMPLETED entries past the entry
+        OR byte cap — host snapshots pin real driver memory, so the
+        bound must be bytes, not just count. In-flight entries have
+        waiters and are never evicted."""
+        while len(self._memo) > self.memo_cap \
+                or self._memo_bytes > self.memo_cap_bytes:
+            for k, v in self._memo.items():
+                if v.event.is_set():
+                    self._memo_bytes -= v.nbytes
+                    del self._memo[k]
+                    break
+            else:
+                return
+
+    def _execute_now(self, step: Step, tier_name: str, mdss,
+                     priority: int = 0):
         tier = self.tiers[tier_name]
         uris = list(step.inputs)
         stale = mdss.stale_bytes(uris, tier_name)
@@ -234,7 +395,7 @@ class MigrationManager:
         self.reports.append(rep)
         if len(self.reports) > self.reports_cap:
             del self.reports[:len(self.reports) - self.reports_cap]
-        return rep
+        return rep, out
 
     def _stage_inputs(self, step: Step, tier_name: str, uris, mdss):
         """MDSS ensure + get with fabric faults (a worker dying while the

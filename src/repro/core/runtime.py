@@ -334,7 +334,8 @@ class EmeraldRuntime:
                  speculate_after: Optional[float] = None,
                  checkpoint_dir: Optional[str] = None, prefetch: bool = True,
                  shared_namespace: str = "shared", name: str = "emerald",
-                 admission_headroom: float = 0.9):
+                 admission_headroom: float = 0.9,
+                 memoize: Optional[bool] = None):
         if manager is None:
             tiers = tiers or default_tiers()
             cm = CostModel(tiers)
@@ -352,11 +353,21 @@ class EmeraldRuntime:
         self.shared_namespace = shared_namespace
         self.name = name
         self.admission_headroom = admission_headroom
+        if memoize is not None:
+            # cross-run step memoization (manager-wide): two tenants
+            # submitting identical step code over content-identical
+            # inputs share one execution. Only for deterministic steps —
+            # see MigrationManager; Step.memoizable overrides per step.
+            self.manager.memoize = memoize
 
         self._fair = FairShare()
         self._inbox: "queue.SimpleQueue" = queue.SimpleQueue()
         self._runs: Dict[str, _Run] = {}
         self._runs_lock = threading.Lock()       # _runs snapshot for stats
+        # run_id -> (namespace, declared residency budget): admitted-but-
+        # unfilled budgets count against remaining capacity at the front
+        # door, so admission is budget-aware, not just occupancy-aware
+        self._reserved: Dict[str, tuple] = {}
         self._busy = {True: 0, False: 0}         # keyed by offloaded?
         # (run_id, step) pairs granted a lane and not yet harvested — the
         # guard that makes a duplicate/late "done" (e.g. a speculation
@@ -412,8 +423,12 @@ class EmeraldRuntime:
         max resident bytes for this run's namespace (MDSS evicts LRU
         entries back to local past the budget). Raises
         :class:`AdmissionRefused` when the shared store is within
-        ``admission_headroom`` of its ``capacity_bytes`` ceiling.
-        Returns a :class:`RunHandle`.
+        ``admission_headroom`` of its ``capacity_bytes`` ceiling, OR when
+        the submission's declared ``residency_budget`` does not fit the
+        *remaining* capacity — current residency plus the still-unfilled
+        declared budgets of every admitted run — so a burst of small-now
+        grow-later tenants is refused up front instead of thrashing the
+        evictor mid-run. Returns a :class:`RunHandle`.
         """
         if self._closed:
             raise RuntimeClosed("runtime is closed")
@@ -438,11 +453,46 @@ class EmeraldRuntime:
         ns = f"run{n}" if namespace is None else namespace
         mdss = self.mdss if ns == "" else self.mdss.namespaced(
             ns, shared=self.shared_namespace)
+        if residency_budget and not ns:
+            raise ValueError(
+                "residency_budget needs a namespaced run (an "
+                "un-namespaced submission shares the base store)")
+        declared = sum(residency_budget.values()) if residency_budget else 0
+        if declared and self.mdss.capacity_bytes:
+            limit = self.admission_headroom * self.mdss.capacity_bytes
+            with self._runs_lock:
+                # check + reserve atomically: two concurrent submits that
+                # each fit alone but not together must not both pass. An
+                # admitted run's unfilled declared budget is capacity it
+                # may still legitimately consume.
+                reserved = sum(
+                    max(0, decl - self.mdss.namespace_resident_bytes(rns))
+                    for rns, decl in self._reserved.values())
+                committed = self.mdss.resident_bytes() + reserved
+                if committed + declared > limit:
+                    raise AdmissionRefused(
+                        f"declared residency budget {declared} does not fit "
+                        f"remaining capacity ({committed} of {limit:.0f} "
+                        "already committed by residency + admitted budgets)")
+                self._reserved[run_id] = (ns, declared)
+        try:
+            return self._submit_admitted(
+                pwf, wf, run_id, ns, mdss, init_vars, residency_budget,
+                policy, fetch, resume, weight, priority, speculate_after,
+                prefetch, checkpointer, events, on_done)
+        except BaseException:
+            # anything that fails between admission and the driver taking
+            # ownership must release the reservation — a leak here would
+            # shrink admission capacity forever
+            with self._runs_lock:
+                self._reserved.pop(run_id, None)
+            raise
+
+    def _submit_admitted(self, pwf, wf, run_id, ns, mdss, init_vars,
+                         residency_budget, policy, fetch, resume, weight,
+                         priority, speculate_after, prefetch, checkpointer,
+                         events, on_done) -> RunHandle:
         if residency_budget:
-            if not ns:
-                raise ValueError(
-                    "residency_budget needs a namespaced run (an "
-                    "un-namespaced submission shares the base store)")
             for tier_name, max_bytes in residency_budget.items():
                 self.mdss.set_namespace_budget(ns, tier_name, max_bytes)
 
@@ -598,6 +648,8 @@ class EmeraldRuntime:
             except queue.Empty:
                 return
             if msg[0] == "submit":
+                with self._runs_lock:
+                    self._reserved.pop(getattr(msg[1], "run_id", None), None)
                 msg[1].handle._finish(error=RuntimeClosed("runtime closed"))
 
     def __enter__(self):
@@ -634,6 +686,8 @@ class EmeraldRuntime:
         elif kind == "submit":
             run = msg[1]
             if self._draining:
+                with self._runs_lock:
+                    self._reserved.pop(run.run_id, None)
                 run.handle._finish(error=RuntimeClosed("runtime closed"))
                 return False
             with self._runs_lock:
@@ -824,6 +878,7 @@ class EmeraldRuntime:
     def _finalize(self, run: _Run, error: Optional[BaseException]):
         with self._runs_lock:
             del self._runs[run.run_id]
+            self._reserved.pop(run.run_id, None)
         self._fair.remove(run.run_id)
         self.runs_completed += 1
         if run.checkpointer is not None:
@@ -864,7 +919,8 @@ class EmeraldRuntime:
     def _run_local(self, run: _Run, s: Step):
         rep = self.manager.execute(s, "local", mdss=run.mdss,
                                    priority=run.priority)
-        run.emit("local", s.name, "local", seconds=rep.seconds)
+        run.emit("local", s.name, "local", seconds=rep.seconds,
+                 memo_hit=rep.memo_hit)
 
     def _offload_with_recovery(self, run: _Run, s: Step):
         tiers_to_try = [self.cloud_tier] * max(1, s.retries) + ["local"]
@@ -876,7 +932,8 @@ class EmeraldRuntime:
                          seconds=rep.seconds, bytes_in=rep.bytes_in,
                          bytes_out=rep.bytes_out, code_only=rep.code_only,
                          attempt=attempt, remote=rep.remote,
-                         worker_pid=rep.worker_pid, staged_s=rep.staged_s)
+                         worker_pid=rep.worker_pid, staged_s=rep.staged_s,
+                         memo_hit=rep.memo_hit)
                 return rep
             except StepFailure as e:      # node failure -> retry / fallback
                 last_err = e
@@ -894,16 +951,19 @@ class EmeraldRuntime:
         # no context manager: pool shutdown must NOT join the straggler
         spool = ThreadPoolExecutor(max_workers=2)
 
-        def execute(t):
+        def execute(t, memo=None):
             return self.manager.execute(s, t, mdss=run.mdss,
-                                        priority=run.priority)
+                                        priority=run.priority, memoize=memo)
         try:
             primary = spool.submit(execute, tier)
             done, _ = wait([primary], timeout=timeout)
             if done:
                 return primary.result()
             run.emit("speculate", s.name, alt, timeout=timeout)
-            backup = spool.submit(execute, alt)
+            # the backup bypasses memoization: under memoize=True it
+            # would otherwise become a WAITER on the primary's own
+            # in-flight memo entry — a "race" that can never overtake
+            backup = spool.submit(execute, alt, False)
             # first *successful* finisher wins: a primary that fails fast
             # right after the backup launches must not fail the step
             pending = {primary, backup}

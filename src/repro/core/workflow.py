@@ -41,6 +41,11 @@ class Step:
     bytes_hint: float = 0.0
     retries: int = 2                           # fault-tolerance budget
     remote_impl: Optional[str] = None          # fabric step-registry name
+    # cross-run memoization override: True forces it on for this step,
+    # False forces it off (e.g. a clock/RNG-reading step under a
+    # memoize=True runtime), None defers to the manager-wide default.
+    # Only set True for deterministic, side-effect-free steps.
+    memoizable: Optional[bool] = None
 
     def scope(self, wf: "Workflow") -> Tuple[str, ...]:
         """Path of enclosing steps."""

@@ -100,7 +100,9 @@ def test_ship_moves_real_bytes(fabric):
     task = fabric.ship(val)
     np.testing.assert_array_equal(task.value["a"], val["a"])
     assert task.bytes_sent > val["a"].nbytes
-    assert task.bytes_received > val["a"].nbytes
+    # the echo direction dedups against the request's own chunks: the
+    # payload comes back as digest references, not bytes
+    assert task.bytes_received < 4096
     assert task.seconds > 0
 
 

@@ -22,8 +22,12 @@
                                           wire, chunk streaming vs
                                           monolithic frames, memoized
                                           duplicate submissions)
+  bench_obs              beyond-paper    (telemetry overhead: bench_dag
+                                          workload with tracing+metrics
+                                          on vs off; span/counter
+                                          hot-path microcosts)
 
-Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_5.json`` next
+Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_6.json`` next
 to the repo root — per-bench wall clock, every CSV row, and each
 module's ``SUMMARY`` dict (bytes on the wire, speedups) — so future PRs
 have a perf baseline to regress against.
@@ -40,13 +44,13 @@ import sys
 import time
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                          os.pardir, "BENCH_5.json")
+                          os.pardir, "BENCH_6.json")
 
 
 def main() -> None:
     from benchmarks import (bench_at, bench_dag, bench_dataplane,
                             bench_fabric, bench_lm_workflow, bench_locality,
-                            bench_mdss, bench_parallel_offload,
+                            bench_mdss, bench_obs, bench_parallel_offload,
                             bench_partitioner, bench_runtime)
     modules = [
         ("bench_mdss", bench_mdss),
@@ -55,6 +59,7 @@ def main() -> None:
         ("bench_runtime", bench_runtime),
         ("bench_locality", bench_locality),
         ("bench_dataplane", bench_dataplane),
+        ("bench_obs", bench_obs),
         ("bench_partitioner", bench_partitioner),
         ("bench_fabric", bench_fabric),
         ("bench_at", bench_at),
@@ -84,7 +89,7 @@ def main() -> None:
         print(f"# {name} done in {wall:.1f}s", file=sys.stderr)
     try:
         with open(BENCH_JSON, "w") as f:
-            json.dump({"bench_version": 5, "benches": report}, f, indent=2,
+            json.dump({"bench_version": 6, "benches": report}, f, indent=2,
                       sort_keys=True)
         print(f"# wrote {os.path.abspath(BENCH_JSON)}", file=sys.stderr)
     except OSError as e:  # pragma: no cover

@@ -157,4 +157,79 @@ assert gap <= 0.35, (
     f"critical-path bound {bound:.3f}s")
 print(f"# dag smoke ok in {time.time() - t0:.1f}s")
 EOF
+
+echo "== obs smoke (trace export + worker span parentage + overhead) =="
+OBS_SMOKE=1 timeout 180 python - <<'EOF'
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import bench_obs
+from repro.cloud import Fabric
+from repro.core import (CostModel, EmeraldRuntime, MDSS, MigrationManager,
+                        Workflow, default_tiers)
+
+t0 = time.time()
+
+
+def tenant_wf(name):
+    wf = Workflow(name)
+    wf.var("x")
+    wf.step("grow", None, inputs=("x",), outputs=("y",), remotable=True,
+            jax_step=False, remote_impl="add_one")
+    wf.step("sq", lambda y: {"z": y * y}, inputs=("y",), outputs=("z",),
+            remotable=True, jax_step=False)
+    return wf
+
+
+tiers = default_tiers()
+cm = CostModel(tiers)
+mgr = MigrationManager(tiers, MDSS(tiers, cost_model=cm), cm)
+with Fabric(workers=1) as fabric:
+    with EmeraldRuntime(mgr, max_workers=2) as rt:
+        rt.attach_fabric(fabric)
+        # two tenants through one runtime, then export one run's trace
+        ha = rt.submit(tenant_wf("alpha"), {"x": np.float64(2.0)})
+        hb = rt.submit(tenant_wf("beta"), {"x": np.float64(4.0)})
+        assert float(ha.result(60)["z"]) == 9.0
+        assert float(hb.result(60)["z"]) == 25.0
+        path = os.path.join(tempfile.mkdtemp(), "trace.json")
+        rt.export_trace(path, run_id=ha.trace_id)
+        snap = rt.introspect()
+        assert snap["workers"].get("num_workers", 0) >= 1
+        assert "broker.tasks_cancelled" in snap["metrics"]
+
+with open(path) as f:
+    doc = json.load(f)
+xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+ids = {e["args"]["span_id"]: e for e in xs}
+worker_xs = [e for e in xs if e["pid"] != os.getpid()]
+# obs gate 1: the exported trace must contain >= 1 worker-process span
+# whose ancestry chain reaches the driver-side dispatch span
+assert worker_xs, "no worker-side spans in the exported trace"
+parented = 0
+for e in worker_xs:
+    chain, cur = [], ids.get(e["args"]["parent_id"])
+    while cur is not None:
+        chain.append(cur["name"])
+        cur = ids.get(cur["args"]["parent_id"])
+    if "dispatch" in chain:
+        parented += 1
+assert parented >= 1, "worker spans not parented under dispatch"
+print(f"bench_obs: trace ok ({len(xs)} spans, {len(worker_xs)} worker-side, "
+      f"{parented} under dispatch)")
+
+# obs gate 2: telemetry overhead on the bench_dag workload stays <= 5%
+ov = bench_obs.measure_overhead(dict(width=4, spread=10.0, base_s=0.02),
+                                iters=2)
+print(f"bench_obs: on={ov['telemetry_on_s'] * 1e3:.0f}ms "
+      f"off={ov['telemetry_off_s'] * 1e3:.0f}ms "
+      f"overhead={ov['overhead_pct']:+.2f}%")
+assert ov["overhead_pct"] <= 5.0, (
+    f"telemetry overhead regression: {ov['overhead_pct']:.2f}% > 5%")
+print(f"# obs smoke ok in {time.time() - t0:.1f}s")
+EOF
 echo "smoke OK"

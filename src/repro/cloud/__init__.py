@@ -78,14 +78,17 @@ class Fabric:
 
     def submit_step(self, step, kwargs: dict,
                     max_attempts: Optional[int] = None,
-                    priority: int = 0) -> Task:
+                    priority: int = 0, trace_ctx=None) -> Task:
+        # trace_ctx: (trace_id, span_id) of the driver-side span — rides
+        # the task frame header so the worker's recv/exec/send phases
+        # come back as child spans (see broker/worker)
         if getattr(step, "remote_impl", None):
             return self.broker.submit(step=step.remote_impl, kwargs=kwargs,
                                       max_attempts=max_attempts,
-                                      priority=priority)
+                                      priority=priority, trace_ctx=trace_ctx)
         return self.broker.submit(fn_bytes=pickle.dumps(step.fn),
                                   kwargs=kwargs, max_attempts=max_attempts,
-                                  priority=priority)
+                                  priority=priority, trace_ctx=trace_ctx)
 
     def ship(self, value, timeout: Optional[float] = 60.0) -> Task:
         return self.broker.ship(value, timeout=timeout)

@@ -72,6 +72,14 @@ class Autoscaler:
         self._thread: Optional[threading.Thread] = None
         self.scale_ups = 0
         self.scale_downs = 0
+        self.ticks = 0
+        self.last_action: dict = {}
+
+    def register_metrics(self, registry):
+        registry.gauge("autoscaler.scale_ups", lambda: self.scale_ups)
+        registry.gauge("autoscaler.scale_downs", lambda: self.scale_downs)
+        registry.gauge("autoscaler.ticks", lambda: self.ticks)
+        registry.gauge("autoscaler.desired_workers", self.desired_workers)
 
     def _backlog(self) -> int:
         if self.backlog_fn is None:
@@ -146,6 +154,8 @@ class Autoscaler:
             self._idle_since = None
         action["reaped"] = self.broker.reap_warm(cfg.warm_ttl_s)
         action["workers"] = self.broker.num_workers()
+        self.ticks += 1
+        self.last_action = action
         return action
 
     # ----------------------------------------------------- background drive

@@ -34,6 +34,7 @@ from concurrent.futures import Future
 from repro.cloud.pool import WorkerHandle, WorkerPool
 from repro.cloud.wire import (ChannelStore, WireError, plan_msg, recv_msg,
                               send_msg)
+from repro.obs.tracing import Tracer, wall_now
 
 
 class FabricError(RuntimeError):
@@ -70,6 +71,8 @@ class Task:
     kwargs: Optional[dict] = None
     value: Any = None               # ship payload
     priority: int = 0               # dispatch class; higher preempts queue
+    trace_ctx: Any = None           # (trace_id, span_id) to propagate over
+                                    # the wire; worker phases parent to it
     max_attempts: int = 3
     attempts: int = 0               # placements so far
     exclude: Set[str] = field(default_factory=set)
@@ -131,6 +134,9 @@ class Broker:
         self.bytes_received = 0
         self._bw_ema: Optional[float] = None       # bytes/s from ship ops
         self._task_s_ema: Optional[float] = None   # seconds per task
+        # disabled by default; a runtime's attach_fabric swaps in its
+        # live tracer so worker-reported phases become spans
+        self.tracer = Tracer(enabled=False)
         self._threads: List[threading.Thread] = []
         self._dispatcher = threading.Thread(target=self._dispatch_loop,
                                             daemon=True, name="fabric-dispatch")
@@ -143,7 +149,8 @@ class Broker:
     def submit(self, *, step: Optional[str] = None,
                fn_bytes: Optional[bytes] = None, kwargs: Optional[dict] = None,
                value: Any = None, kind: str = "task",
-               max_attempts: Optional[int] = None, priority: int = 0) -> Task:
+               max_attempts: Optional[int] = None, priority: int = 0,
+               trace_ctx=None) -> Task:
         if kind == "task" and not step and fn_bytes is None:
             raise FabricError("task needs a registry step name or fn_bytes")
         with self._cond:
@@ -152,6 +159,7 @@ class Broker:
             self._task_counter += 1
             t = Task(self._task_counter, kind, step=step, fn_bytes=fn_bytes,
                      kwargs=kwargs, value=value, priority=priority,
+                     trace_ctx=trace_ctx,
                      max_attempts=max_attempts or self.max_attempts)
             self._queue.append(t)
             self._cond.notify_all()
@@ -283,6 +291,53 @@ class Broker:
             (finished if t.done() else pending).append(t)
         return finished, pending
 
+    def dedup_stats(self) -> dict:
+        """Aggregate chunk-dedup effectiveness across live worker
+        channels (dead workers' per-connection stores are gone with
+        their sockets)."""
+        agg = {"dedup_chunks": 0, "saved_bytes": 0, "sent_bytes_held": 0,
+               "received_bytes_held": 0, "evicted": 0}
+        with self._cond:
+            stores = [h.store for h in self._workers.values()
+                      if h.store is not None]
+        for st in stores:
+            s = st.stats()
+            for k in agg:
+                agg[k] += s[k]
+        return agg
+
+    def register_metrics(self, registry):
+        """Expose every broker counter — including the previously
+        orphaned ``tasks_cancelled`` — plus live queue/worker gauges and
+        wire dedup effectiveness in a metrics registry."""
+        registry.gauge("broker.queue_depth", self.queue_depth)
+        registry.gauge("broker.inflight", self.inflight)
+        registry.gauge("broker.num_workers", self.num_workers)
+        registry.gauge("broker.num_workers_with_warm",
+                       lambda: self.num_workers(include_warm=True))
+        registry.gauge("broker.idle_workers", self.idle_workers)
+        registry.gauge("broker.tasks_done", lambda: self.tasks_done)
+        registry.gauge("broker.tasks_requeued", lambda: self.tasks_requeued)
+        registry.gauge("broker.tasks_cancelled",
+                       lambda: self.tasks_cancelled)
+        registry.gauge("broker.workers_lost", lambda: self.workers_lost)
+        registry.gauge("broker.warm_hits", lambda: self.warm_hits)
+        registry.gauge("wire.bytes_sent", lambda: self.bytes_sent)
+        registry.gauge("wire.bytes_received", lambda: self.bytes_received)
+        registry.gauge("wire.dedup_saved_bytes",
+                       lambda: self.dedup_stats()["saved_bytes"])
+        registry.gauge("wire.dedup_chunks",
+                       lambda: self.dedup_stats()["dedup_chunks"])
+        registry.gauge("wire.dedup_hit_rate", self._dedup_hit_rate)
+
+    def _dedup_hit_rate(self) -> Optional[float]:
+        """Fraction of logical payload bytes dedup kept off the wire."""
+        saved = self.dedup_stats()["saved_bytes"]
+        with self._cond:
+            sent = self.bytes_sent
+        total = sent + saved
+        return (saved / total) if total else None
+
     def observed_bandwidth(self) -> Optional[float]:
         """EMA bytes/sec from ship round-trips; None before any sample."""
         return self._bw_ema
@@ -333,6 +388,10 @@ class Broker:
                 self._inflight[worker.worker_id] = task
                 task.attempts += 1
             msg = {"op": task.kind, "task_id": task.task_id}
+            if task.trace_ctx is not None and self.tracer.enabled:
+                # span context rides the task frame header — the worker
+                # echoes it back with its phase timings
+                msg["trace"] = tuple(task.trace_ctx)
             if task.kind == "ship":
                 msg["value"] = task.value
             else:
@@ -398,6 +457,7 @@ class Broker:
                                 else 0.5 * s + 0.5 * self._task_s_ema
                 self._cond.notify_all()
             if task is not None:
+                self._materialize_worker_spans(task, msg, h)
                 if op == "result":
                     task.future.set_result(msg.get("value"))
                 else:
@@ -405,6 +465,32 @@ class Broker:
                         msg.get("traceback") or msg.get("error", "remote error")))
         if not self._closed:
             self._on_worker_death(h)
+
+    def _materialize_worker_spans(self, task: Task, msg: dict,
+                                  h: WorkerHandle):
+        """Turn the worker's reported phase timings into spans parented
+        under the driver-side span whose ctx rode the request frame,
+        plus a synthesized ``send`` span for the reply transfer (measured
+        driver-side as ``down_s``). Worker wall clocks place the phases
+        on the shared epoch timeline; their durations are monotonic."""
+        if task.trace_ctx is None or not self.tracer.enabled:
+            return
+        trace_id, parent_id = task.trace_ctx
+        track = f"worker:{h.pid}"
+        for ph in msg.get("spans") or ():
+            try:
+                self.tracer.add_span(
+                    trace_id, str(ph["name"]), float(ph["t0"]),
+                    float(ph["dur"]), parent_id=parent_id, cat="worker",
+                    track=track, pid=h.pid, task_id=task.task_id,
+                    step=task.step or "")
+            except (KeyError, TypeError, ValueError):
+                continue    # malformed phase from an old/foreign worker
+        if task.down_s > 0:
+            self.tracer.add_span(
+                trace_id, "send", wall_now() - task.down_s, task.down_s,
+                parent_id=parent_id, cat="worker", track=track, pid=h.pid,
+                task_id=task.task_id)
 
     # ---------------------------------------------------------------- death
     def _on_worker_death(self, h: WorkerHandle):

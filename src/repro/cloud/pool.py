@@ -129,6 +129,10 @@ class WorkerPool:
             self.spawned_total += 1
         return WorkerHandle(wid, proc, sock, pid)
 
+    def register_metrics(self, registry):
+        registry.gauge("pool.spawned_total", lambda: self.spawned_total)
+        registry.gauge("pool.pending_hellos", lambda: len(self._pending))
+
     def kill(self, h: WorkerHandle, grace_s: float = 2.0):
         h.state = "dead"
         try:

@@ -142,6 +142,18 @@ class ChannelStore:
         got = self.received.get(d)
         return got if got is not None else self.sent.get(d)
 
+    def stats(self) -> dict:
+        """Dedup effectiveness + cache occupancy for this connection."""
+        return {
+            "dedup_chunks": self.dedup_chunks,
+            "saved_bytes": self.saved_bytes,
+            "sent_chunks": len(self.sent),
+            "sent_bytes_held": self.sent.bytes_held,
+            "received_chunks": len(self.received),
+            "received_bytes_held": self.received.bytes_held,
+            "evicted": self.sent.evicted + self.received.evicted,
+        }
+
 
 # ------------------------------------------------------------- tree <-> wire
 @dataclass(frozen=True)

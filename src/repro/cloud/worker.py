@@ -89,6 +89,21 @@ def serve(host: str, port: int, worker_id: str, init_modules, heartbeat_s: float
                          "error": f"unknown op {op!r}"}
             reply["req_recv_s"] = stats.get("recv_s", 0.0)
             reply["work_s"] = time.perf_counter() - t0
+            if msg.get("trace") is not None:
+                # span context arrived in the task frame header: report
+                # this task's phases as (wall t0, duration) dicts — the
+                # broker re-materialises them as child spans of the
+                # driver-side span identified by msg["trace"]. Wall clock
+                # on purpose: it is the one clock both processes share.
+                wall1 = time.time()
+                work_s = reply["work_s"]
+                recv_s = reply["req_recv_s"]
+                reply["trace"] = msg["trace"]
+                reply["spans"] = [
+                    {"name": "recv", "t0": wall1 - work_s - recv_s,
+                     "dur": recv_s},
+                    {"name": "exec", "t0": wall1 - work_s, "dur": work_s},
+                ]
             try:
                 with send_lock:
                     send_msg(sock, reply, store)

@@ -819,6 +819,68 @@ class MDSS:
     def total_bytes_moved(self) -> int:
         return sum(self.bytes_moved.values())
 
+    def register_metrics(self, registry):
+        """Expose the store's counters — including the previously
+        orphaned ``eviction_bytes`` — as pull gauges in a metrics
+        registry. Gauges read under the store lock at snapshot time, so
+        hot-path puts/transfers pay nothing extra."""
+        registry.gauge("mdss.resident_bytes", self.resident_bytes)
+        registry.gauge("mdss.bytes_moved", self.total_bytes_moved)
+        registry.gauge("mdss.modeled_seconds", lambda: self.modeled_seconds)
+        registry.gauge("mdss.prefetch_ops", lambda: self.prefetch_ops)
+        registry.gauge("mdss.prefetch_bytes", lambda: self.prefetch_bytes)
+        registry.gauge("mdss.fenced_puts", lambda: self.fenced_puts)
+        registry.gauge("mdss.evictions", lambda: self.evictions)
+        registry.gauge("mdss.eviction_bytes", lambda: self.eviction_bytes)
+        registry.gauge("mdss.dedup_bytes_elided",
+                       lambda: self.dedup_bytes_elided)
+        registry.gauge("mdss.entries", lambda: len(self._entries))
+        registry.gauge("mdss.chunk_index_bytes", self._chunk_index_bytes)
+
+    def _chunk_index_bytes(self) -> int:
+        """Deduped bytes across every tier's chunk index."""
+        with self._lock:
+            return sum(sum(ln for _, ln in idx.values())
+                       for idx in self._tier_chunks.values())
+
+    def introspect(self) -> dict:
+        """Structured residency snapshot: per-(namespace, tier) resident
+        bytes vs. budget, per-tier totals + chunk-index occupancy, and
+        the store's cumulative counters. One lock hold — internally
+        consistent."""
+        with self._lock:
+            residency = [
+                {"namespace": ns, "tier": tier, "resident_bytes": n,
+                 "budget_bytes": self._budgets.get((ns, tier))}
+                for (ns, tier), n in sorted(self._ns_tier_bytes.items())]
+            tier_rows = []
+            for name in self.tiers:
+                idx = self._tier_chunks.get(name, {})
+                tier_rows.append({
+                    "name": name,
+                    "objects": sum(1 for e in self._entries.values()
+                                   if name in e.copies),
+                    "resident_bytes": sum(
+                        v for (_, t), v in self._ns_tier_bytes.items()
+                        if t == name),
+                    "capacity_bytes": None,   # store-wide cap: see top level
+                    "chunks": len(idx),
+                    "chunk_bytes": sum(ln for _, ln in idx.values()),
+                })
+            counters = {
+                "bytes_moved": sum(self.bytes_moved.values()),
+                "modeled_seconds": self.modeled_seconds,
+                "prefetch_ops": self.prefetch_ops,
+                "prefetch_bytes": self.prefetch_bytes,
+                "fenced_puts": self.fenced_puts,
+                "evictions": self.evictions,
+                "eviction_bytes": self.eviction_bytes,
+                "dedup_bytes_elided": self.dedup_bytes_elided,
+                "entries": len(self._entries),
+            }
+        return {"residency": residency, "tiers": tier_rows,
+                "capacity_bytes": self.capacity_bytes, "counters": counters}
+
     def reset_accounting(self):
         self.bytes_moved.clear()
         self.ns_bytes_moved.clear()

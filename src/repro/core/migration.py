@@ -57,6 +57,7 @@ from repro.core.cost_model import CostModel
 from repro.core.mdss import MDSS, nbytes_of
 from repro.core.tiers import Tier
 from repro.core.workflow import Step
+from repro.obs.tracing import Tracer
 
 
 class StepFailure(RuntimeError):
@@ -158,6 +159,25 @@ class MigrationManager:
         # runtime, and an unbounded per-step report log would grow forever
         self.reports_cap = 4096
         self.reports: list[OffloadReport] = []
+        # disabled by default; an owning runtime swaps in its live tracer
+        # so stage/exec/install phases record under the dispatch span
+        self.tracer = Tracer(enabled=False)
+
+    def register_metrics(self, registry):
+        """Expose the manager's cross-run caches in a metrics registry."""
+        registry.gauge("memo.entries", lambda: len(self._memo))
+        registry.gauge("memo.bytes", lambda: self._memo_bytes)
+        registry.gauge("memo.hits", lambda: self.memo_hits)
+        registry.gauge("memo.waits", lambda: self.memo_waits)
+        registry.gauge("compile_cache.entries",
+                       lambda: len(self._compile_cache))
+        registry.gauge("compile_cache.hits",
+                       lambda: self.compile_cache_hits)
+
+    def memo_stats(self) -> dict:
+        return {"entries": len(self._memo), "bytes": self._memo_bytes,
+                "hits": self.memo_hits, "waits": self.memo_waits,
+                "compile_cache_hits": self.compile_cache_hits}
 
     # ----------------------------------------------------------- executable
     def _executable(self, step: Step, tier_name: str):
@@ -346,12 +366,19 @@ class MigrationManager:
         out_versions = fence(step.outputs) if fence is not None else \
             {k: mdss.version(k) for k in step.outputs}
         t_stage = time.perf_counter()
-        bytes_in, kwargs = self._stage_inputs(step, tier_name, uris, mdss)
+        with self.tracer.span("ship", cat="data", step=step.name,
+                              tier=tier_name) as shsp:
+            bytes_in, kwargs = self._stage_inputs(step, tier_name, uris,
+                                                  mdss)
+            if shsp.ctx is not None:
+                shsp.set(bytes=bytes_in)
         staged_s = time.perf_counter() - t_stage
         fabric = getattr(tier, "worker_pool", None)
         if fabric is not None and fabric.can_run(step):
-            out, dt, wire_in, wire_out, pid = self._execute_remote(
-                step, fabric, kwargs, priority)
+            with self.tracer.span("exec", cat="exec", step=step.name,
+                                  tier=tier_name, remote=True):
+                out, dt, wire_in, wire_out, pid = self._execute_remote(
+                    step, fabric, kwargs, priority)
             # report the worker's actual wire ingress; the MDSS staging
             # bytes remain visible in mdss.bytes_moved
             bytes_in = wire_in
@@ -360,10 +387,12 @@ class MigrationManager:
             fn = self._executable(step, tier_name)
             self._capture_cost(step, fn, kwargs)
             t0 = time.perf_counter()
-            ctx = tier.mesh if tier.mesh is not None else _nullcontext()
-            with ctx:
-                out = fn(**kwargs)
-            out = jax.block_until_ready(out) if step.jax_step else out
+            with self.tracer.span("exec", cat="exec", step=step.name,
+                                  tier=tier_name, remote=False):
+                ctx = tier.mesh if tier.mesh is not None else _nullcontext()
+                with ctx:
+                    out = fn(**kwargs)
+                out = jax.block_until_ready(out) if step.jax_step else out
             dt = time.perf_counter() - t0
             remote, worker_pid, wire_bytes_out = False, 0, 0
         if not isinstance(out, dict):
@@ -376,10 +405,14 @@ class MigrationManager:
             raise StepFailure(f"step {step.name} missing outputs {missing}")
         # all-or-nothing fenced publish: twins can never interleave a
         # mixed set of one step's outputs
-        published = mdss.put_many(
-            {k: out[k] for k in step.outputs}, tier=tier_name,
-            expect_versions=out_versions)
-        fenced = published is None
+        with self.tracer.span("install", cat="data", step=step.name,
+                              tier=tier_name) as insp:
+            published = mdss.put_many(
+                {k: out[k] for k in step.outputs}, tier=tier_name,
+                expect_versions=out_versions)
+            fenced = published is None
+            if insp.ctx is not None:
+                insp.set(fenced=fenced)
         bytes_out = 0 if fenced else sum(nbytes_of(out[k])
                                          for k in step.outputs)
         if remote and not fenced:   # a refused publish moved no output bytes
@@ -421,7 +454,11 @@ class MigrationManager:
         from concurrent.futures import TimeoutError as _FutTimeout
         from repro.cloud.broker import FabricError
         try:
-            task = fabric.submit_step(step, kwargs, priority=priority)
+            # the current (exec) span's identity rides the task frame
+            # header to the worker — its recv/exec/send phases come back
+            # in the reply and nest under this driver-side span
+            task = fabric.submit_step(step, kwargs, priority=priority,
+                                      trace_ctx=self.tracer.current_ctx())
             out = task.result(self.remote_timeout_s)
         except FabricError as e:
             raise StepFailure(f"fabric: {e}") from e

@@ -87,17 +87,20 @@ from repro.core.scheduler import (POLICIES, FairShare, critical_path_lengths,
                                   make_policy)
 from repro.core.tiers import default_tiers
 from repro.core.workflow import Step, Workflow
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracing import Tracer, wall_now
 
 
 @dataclass
 class Event:
     kind: str          # suspend | offload | resume | local | retry |
                        # speculate | prefetch | checkpoint | place |
-                       # step_done
+                       # step_done — schema in repro.obs.events
     step: str
     tier: str = ""
-    t: float = 0.0
+    t: float = 0.0      # perf_counter: monotonic, for intra-process deltas
     info: dict = field(default_factory=dict)
+    t_wall: float = 0.0  # wall-clock epoch seconds: cross-process timeline
 
 
 class WorkflowFailure(RuntimeError):
@@ -311,11 +314,21 @@ class _Run:
     ckpt_dirty: bool = False
     ckpt_inflight: int = 0          # writes queued on the checkpoint lane
     placements: Dict[str, Any] = field(default_factory=dict)
+    placed: Dict[str, str] = field(default_factory=dict)  # step -> tier
+    retries: int = 0
+    # wall/monotonic epoch pair fixed at submission: every event's
+    # t_wall = epoch_wall + (t - epoch_perf), so driver events land on
+    # the same epoch timeline as worker-reported phases (satellite: the
+    # old perf_counter-only Event was incomparable across processes)
+    epoch_wall: float = field(default_factory=time.time)
+    epoch_perf: float = field(default_factory=time.perf_counter)
+    root_ctx: Any = None            # (trace_id, span_id) of the run span
 
     def emit(self, kind, step, tier="", **info):
+        t = time.perf_counter()
         with self.lock:
-            self.events.append(Event(kind, step, tier, time.perf_counter(),
-                                     info))
+            self.events.append(Event(kind, step, tier, t, info,
+                                     self.epoch_wall + (t - self.epoch_perf)))
 
 
 _AUTO = object()
@@ -335,7 +348,10 @@ class EmeraldRuntime:
                  checkpoint_dir: Optional[str] = None, prefetch: bool = True,
                  shared_namespace: str = "shared", name: str = "emerald",
                  admission_headroom: float = 0.9,
-                 memoize: Optional[bool] = None):
+                 memoize: Optional[bool] = None,
+                 telemetry: bool = True,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if manager is None:
             tiers = tiers or default_tiers()
             cm = CostModel(tiers)
@@ -343,6 +359,17 @@ class EmeraldRuntime:
         assert policy in POLICIES
         self.manager = manager
         self.mdss = manager.mdss                 # the shared base store
+        # telemetry=False turns tracing AND metrics into no-ops (one
+        # boolean check per call site) for minimum-overhead runs; pass a
+        # shared Tracer/MetricsRegistry to aggregate across runtimes
+        self.telemetry = telemetry
+        self.tracer = tracer if tracer is not None else Tracer(
+            enabled=telemetry)
+        self.metrics = metrics if metrics is not None else MetricsRegistry(
+            enabled=telemetry)
+        manager.tracer = self.tracer
+        manager.register_metrics(self.metrics)
+        self.mdss.register_metrics(self.metrics)
         self.default_policy = policy
         self.cloud_tier = cloud_tier
         self.max_workers = max_workers
@@ -381,6 +408,15 @@ class EmeraldRuntime:
         self._close_done = threading.Event()
         self._draining = False
         self.runs_completed = 0
+        self._fabric = None
+
+        m = self.metrics
+        m.gauge("runtime.active_runs", self.active_runs)
+        m.gauge("runtime.offload_backlog", self.offload_backlog)
+        m.gauge("runtime.lane_busy.offload", lambda: self._busy[True])
+        m.gauge("runtime.lane_busy.local", lambda: self._busy[False])
+        m.gauge("runtime.runs_completed", lambda: self.runs_completed)
+        m.gauge("scheduler.fair_share", self._fair.shares)
 
         self._offload_pool = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix=f"{name}-offload")
@@ -544,6 +580,11 @@ class EmeraldRuntime:
         handle = RunHandle(run_id, ns, self, sink)
         # installed before the run can possibly finalize — no TOCTOU
         handle._on_done = on_done
+        # one trace per run: the root "run" span's identity is allocated
+        # now (so every child can parent to it) and recorded at finalize
+        handle.trace_id = run_id
+        root_ctx = (run_id, self.tracer.next_id()) \
+            if self.tracer.enabled else None
         run = _Run(run_id=run_id, ns=ns, handle=handle, wf=wf, steps=steps,
                    succs=succs, indeg=indeg, order_idx=order_idx,
                    completed=completed, mdss=mdss, policy=run_policy,
@@ -552,7 +593,8 @@ class EmeraldRuntime:
                    speculate_after=self.speculate_after
                    if speculate_after is _AUTO else speculate_after,
                    prefetch=self.prefetch if prefetch is None else prefetch,
-                   events=sink)
+                   events=sink, root_ctx=root_ctx)
+        handle.epoch_wall = run.epoch_wall
         if checkpointer is not None:
             checkpointer._emit = run.emit
         self._inbox.put(("submit", run))
@@ -591,6 +633,21 @@ class EmeraldRuntime:
         if getattr(fabric, "autoscaler", None) is not None:
             fabric.autoscaler.backlog_fn = self.offload_backlog
             fabric.autoscaler.churn_fn = lambda: self.mdss.eviction_bytes
+        # wire the fabric into this runtime's telemetry: the broker gets
+        # the tracer (worker-reported phases re-materialise as spans) and
+        # every fabric component registers its counters/gauges
+        self._fabric = fabric
+        broker = getattr(fabric, "broker", None)
+        if broker is not None:
+            broker.tracer = self.tracer
+            if hasattr(broker, "register_metrics"):
+                broker.register_metrics(self.metrics)
+        pool = getattr(fabric, "pool", None)
+        if pool is not None and hasattr(pool, "register_metrics"):
+            pool.register_metrics(self.metrics)
+        scaler = getattr(fabric, "autoscaler", None)
+        if scaler is not None and hasattr(scaler, "register_metrics"):
+            scaler.register_metrics(self.metrics)
         return transport
 
     # ---------------------------------------------------------------- stats
@@ -610,6 +667,113 @@ class EmeraldRuntime:
             ready = sum(len(r.ready[True]) for r in self._runs.values()
                         if not r.failures and not r.cancelled)
         return min(ready, self.max_workers)
+
+    # --------------------------------------------------------- introspection
+    def introspect(self, timeout: float = 10.0) -> dict:
+        """Structured snapshot of the whole runtime: runs (per-step
+        states, placements, retries), lane occupancy, per-(namespace,
+        tier) residency vs. budget, memo table, workers, and a metrics
+        snapshot.
+
+        The snapshot is built ON the driver thread, serialised with
+        every state mutation — a step can never appear simultaneously
+        in-flight and completed, across any number of tenants. Falls
+        back to a direct (best-effort) read when the driver is gone
+        (closed runtime) or does not answer within ``timeout``.
+        """
+        if self._driver.is_alive() and not self._closed:
+            box: dict = {}
+            done = threading.Event()
+            self._inbox.put(("introspect", box, done))
+            if done.wait(timeout) and "snapshot" in box:
+                return box["snapshot"]
+        # driver gone or unresponsive: read directly. Post-close nothing
+        # mutates, so this is exact; on a wedged driver it is best-effort.
+        return self._introspect_unsafe()
+
+    def _introspect_unsafe(self) -> dict:
+        with self._runs_lock:
+            runs = list(self._runs.values())
+        run_rows = []
+        for run in runs:
+            states = {nm: "pending" for nm in run.steps}
+            for h in run.ready.values():
+                for _, _, nm in h:
+                    states[nm] = "ready"
+            # inflight/completed written LAST: _complete() moves a step
+            # from _outstanding into run.completed on this same driver
+            # thread, so the two sets are disjoint here by construction
+            for rid, nm in list(self._outstanding):
+                if rid == run.run_id and nm in states:
+                    states[nm] = "inflight"
+            for nm in run.completed:
+                if nm in states:
+                    states[nm] = "completed"
+            n_ready = sum(1 for st in states.values() if st == "ready")
+            run_rows.append({
+                "run_id": run.run_id,
+                "ns": run.ns,
+                "state": ("cancelled" if run.cancelled
+                          else "failing" if run.failures else "running"),
+                "completed": len(run.completed),
+                "inflight": run.inflight,
+                "ready": n_ready,
+                "pending": sum(1 for st in states.values()
+                               if st == "pending"),
+                "retries": run.retries,
+                "weight": run.weight,
+                "priority": run.priority,
+                "steps": states,
+                "placements": dict(run.placed),
+                "fair_share_vtime": self._fair.share_of(run.run_id),
+            })
+        snap = {
+            "runtime": {
+                "pid": os.getpid(), "name": self.name,
+                "telemetry": self.telemetry, "closed": self._closed,
+                "draining": self._draining,
+                "runs_completed": self.runs_completed,
+                "trace_spans": len(self.tracer.spans())
+                if self.tracer.enabled else 0,
+                "trace_dropped": self.tracer.dropped,
+            },
+            "lanes": {
+                "offload": {"busy": self._busy[True],
+                            "slots": self._slots[True]},
+                "local": {"busy": self._busy[False],
+                          "slots": self._slots[False]},
+            },
+            "runs": run_rows,
+            "fair_share": self._fair.shares(),
+            "mdss": self.mdss.introspect(),
+            "memo": self.manager.memo_stats(),
+            "workers": self._fabric_info(),
+            "metrics": self.metrics.snapshot(),
+        }
+        return snap
+
+    def _fabric_info(self) -> dict:
+        broker = getattr(self._fabric, "broker", None)
+        if broker is None:
+            return {}
+        try:
+            return {
+                "num_workers": broker.num_workers(),
+                "warm": (broker.num_workers(include_warm=True)
+                         - broker.num_workers()),
+                "idle": broker.idle_workers(),
+                "queue_depth": broker.queue_depth(),
+                "inflight": broker.inflight(),
+                "pids": broker.worker_pids(),
+            }
+        except Exception:
+            return {}
+
+    def export_trace(self, path: str, run_id: Optional[str] = None) -> str:
+        """Write the Chrome trace-event JSON for ``run_id`` (or every
+        recorded span) to ``path``; open it in Perfetto or
+        ``chrome://tracing``."""
+        return self.tracer.export_json(path, trace_id=run_id)
 
     # ------------------------------------------------------------- shutdown
     def close(self, timeout: Optional[float] = 60.0):
@@ -651,6 +815,10 @@ class EmeraldRuntime:
                 with self._runs_lock:
                     self._reserved.pop(getattr(msg[1], "run_id", None), None)
                 msg[1].handle._finish(error=RuntimeClosed("runtime closed"))
+            elif msg[0] == "introspect":
+                # answer directly so a caller racing close() never hangs
+                msg[1]["snapshot"] = self._introspect_unsafe()
+                msg[2].set()
 
     def __enter__(self):
         return self
@@ -716,6 +884,10 @@ class EmeraldRuntime:
                 run.cancelled = True
                 run.ready = {True: [], False: []}
                 touched.append(run)
+        elif kind == "introspect":
+            # built here, between mutations — serially consistent
+            msg[1]["snapshot"] = self._introspect_unsafe()
+            msg[2].set()
         self._dispatch_all()
         for run in touched:
             if run.run_id in self._runs:
@@ -733,11 +905,17 @@ class EmeraldRuntime:
             # ready — its inputs are final here (every producer
             # completed), so the residency map it scores is the one its
             # staging will actually see
-            decision = place(s)
+            with self.tracer.span("place", cat="sched", track="driver",
+                                  parent=run.root_ctx, step=name) as sp:
+                decision = place(s)
+                if sp.ctx is not None:
+                    sp.set(tier=decision.tier, reason=decision.reason)
             run.placements[name] = decision
             lane = decision.offload
         else:
             lane = run.policy.should_offload(s)
+        run.placed[name] = decision.tier if place is not None \
+            else (self.cloud_tier if lane else "local")
         heapq.heappush(run.ready[lane], (-prio, run.order_idx[name], name))
 
     def _dispatch_all(self):
@@ -768,6 +946,7 @@ class EmeraldRuntime:
                 run.inflight += 1
                 self._busy[lane] += 1
                 self._outstanding.add((run.run_id, name))
+                self.metrics.inc("runtime.steps_dispatched")
                 pool.submit(self._lane, run, s, lane)
 
     def _est_cost(self, s: Step, decision=None) -> float:
@@ -810,6 +989,12 @@ class EmeraldRuntime:
             run.emit("resume", name)
         run.completed.add(name)
         run.emit("step_done", name, offloaded=offloaded)
+        self.metrics.inc("runtime.steps_completed")
+        if run.root_ctx is not None:
+            self.tracer.add_span(run.run_id, "complete", wall_now(), 0.0,
+                                 parent_id=run.root_ctx[1], cat="sched",
+                                 track="driver", step=name,
+                                 offloaded=offloaded)
         # outputs cached BEFORE successors dispatch (see RunCheckpointer)
         if run.checkpointer is not None:
             run.checkpointer._cache_outputs(run.steps[name])
@@ -881,6 +1066,15 @@ class EmeraldRuntime:
             self._reserved.pop(run.run_id, None)
         self._fair.remove(run.run_id)
         self.runs_completed += 1
+        if run.root_ctx is not None:
+            # the run's root span, with the identity every child used
+            self.tracer.add_span(
+                run.run_id, "run", run.epoch_wall,
+                time.perf_counter() - run.epoch_perf,
+                span_id=run.root_ctx[1], cat="run",
+                track=f"run:{run.run_id}", namespace=run.ns,
+                steps=len(run.steps),
+                outcome="error" if error is not None else "ok")
         if run.checkpointer is not None:
             run.checkpointer._ckpt_cache.clear()   # release pinned copies
         if error is not None:
@@ -907,10 +1101,18 @@ class EmeraldRuntime:
     # ----------------------------------------------------------- lane bodies
     def _lane(self, run: _Run, s: Step, offloaded: bool):
         try:
-            if offloaded:
-                self._offload_with_recovery(run, s)
-            else:
-                self._run_local(run, s)
+            # the dispatch span: everything below — staging, ship, remote
+            # exec, install — nests under it via the lane thread's TLS,
+            # and its ctx rides the wire so worker-side phases do too
+            with self.tracer.span(
+                    "dispatch", cat="sched",
+                    track=f"lane:{'offload' if offloaded else 'local'}",
+                    trace_id=run.run_id, parent=run.root_ctx,
+                    step=s.name, run=run.run_id):
+                if offloaded:
+                    self._offload_with_recovery(run, s)
+                else:
+                    self._run_local(run, s)
             err = None
         except BaseException as e:           # harvested by the driver
             err = e
@@ -937,6 +1139,8 @@ class EmeraldRuntime:
                 return rep
             except StepFailure as e:      # node failure -> retry / fallback
                 last_err = e
+                run.retries += 1
+                self.metrics.inc("runtime.step_retries")
                 run.emit("retry", s.name, tier, attempt=attempt,
                          error=str(e))
         raise WorkflowFailure(f"step {s.name} failed on all tiers: {last_err}")
@@ -950,10 +1154,15 @@ class EmeraldRuntime:
         timeout = est * run.speculate_after
         # no context manager: pool shutdown must NOT join the straggler
         spool = ThreadPoolExecutor(max_workers=2)
+        # speculation twins run on fresh threads: re-attach the lane
+        # thread's dispatch span so their ship/exec spans stay parented
+        ctx = self.tracer.current_ctx()
 
         def execute(t, memo=None):
-            return self.manager.execute(s, t, mdss=run.mdss,
-                                        priority=run.priority, memoize=memo)
+            with self.tracer.attach(ctx):
+                return self.manager.execute(s, t, mdss=run.mdss,
+                                            priority=run.priority,
+                                            memoize=memo)
         try:
             primary = spool.submit(execute, tier)
             done, _ = wait([primary], timeout=timeout)

@@ -129,6 +129,15 @@ class FairShare:
     def share_of(self, run_id: str) -> float:
         return self._vtime.get(run_id, 0.0)
 
+    def shares(self) -> Dict[str, dict]:
+        """Snapshot of every run's virtual time, weight and deficit
+        (vtime - min vtime: how far ahead of its fair share the run is;
+        0 means it is owed the next slot). For introspection/metrics."""
+        base = min(self._vtime.values(), default=0.0)
+        return {rid: {"vtime": vt, "weight": self._weight.get(rid, 1.0),
+                      "deficit": vt - base}
+                for rid, vt in self._vtime.items()}
+
 
 class OffloadPolicy(Protocol):
     def should_offload(self, step: Step) -> bool: ...

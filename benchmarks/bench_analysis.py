@@ -1,0 +1,110 @@
+"""Analysis overhead: verifier wall time on a 1k-step DAG + sanitizer
+replay throughput.
+
+The verifier runs at every ``submit()`` under the default
+``validate="error"``, so its cost is pure admission latency — the budget
+is <100 ms for a 1000-step workflow (scripts/smoke.sh gates on it). The
+hot loops are the RAW-ancestor bitmask sweep and the iterative cycle
+DFS, both linear-ish in edges; this bench is the regression tripwire for
+anyone adding a quadratic rule.
+
+Reported: verify() wall time on a 1k-step layered DAG (cold, including
+rule evaluation), the same DAG's kinded dependencies() build, and
+sanitizer.check() replay over a synthetic 10k-event log.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import row, timeit
+from repro.analysis import sanitizer, verify
+from repro.core import Workflow
+from repro.core.runtime import Event
+
+SMOKE = bool(os.environ.get("ANALYSIS_SMOKE"))
+
+#: smoke-gate budget for verify() on the 1k-step DAG (seconds)
+VERIFY_BUDGET_S = 0.100
+
+SUMMARY: Dict[str, float] = {}
+
+
+def _fn(**kw):
+    return {}
+
+
+def make_layered_wf(steps: int = 1000, width: int = 20) -> Workflow:
+    """``steps`` steps in layers of ``width``; each step reads two
+    previous-layer outputs plus the seed — a dense-enough DAG that the
+    bitmask sweep, conflict scan and dead-step closure all do real work."""
+    wf = Workflow(f"layered{steps}")
+    wf.var("x")
+    prev: List[str] = ["x"]
+    made = 0
+    while made < steps:
+        layer: List[str] = []
+        for i in range(min(width, steps - made)):
+            name = f"s{made}"
+            ins = ("x", prev[i % len(prev)], prev[(i + 1) % len(prev)])
+            wf.step(name, _fn, inputs=tuple(dict.fromkeys(ins)),
+                    outputs=(f"v{made}",))
+            layer.append(f"v{made}")
+            made += 1
+        prev = layer
+    wf.step("reduce", _fn, inputs=tuple(prev), outputs=("out",))
+    return wf
+
+
+def make_event_log(n_steps: int = 5000) -> List[Event]:
+    evs: List[Event] = []
+    t = 0.0
+    for i in range(n_steps):
+        evs.append(Event("dispatch", f"s{i}", "cloud", 0.0,
+                         {"lane": "offload"}, t))
+        evs.append(Event("step_done", f"s{i}", "cloud", 0.001,
+                         {"offloaded": True}, t + 0.001))
+        t += 0.002
+    return evs
+
+
+def main() -> List[str]:
+    n = 200 if SMOKE else 1000
+    wf = make_layered_wf(n)
+    t_verify = timeit(lambda: verify(wf, provided={"x"}), warmup=1, iters=3)
+    findings = verify(wf, provided={"x"})
+    assert not findings, [str(f) for f in findings]  # the DAG itself is clean
+
+    t_kinds = timeit(lambda: wf.dependencies(kinds=True), warmup=1, iters=3)
+
+    log = make_event_log(1000 if SMOKE else 5000)
+    t_replay = timeit(lambda: sanitizer.check(log), warmup=1, iters=3)
+    assert sanitizer.check(log) == []
+    ev_per_s = len(log) / t_replay
+
+    SUMMARY.update(
+        verify_1k_ms=round(t_verify * 1e3, 2),
+        verify_budget_ms=VERIFY_BUDGET_S * 1e3,
+        kinded_deps_1k_ms=round(t_kinds * 1e3, 2),
+        sanitizer_events_per_s=round(ev_per_s),
+    )
+    return [
+        row(f"analysis_verify_{n}step", t_verify,
+            f"budget_ms={VERIFY_BUDGET_S * 1e3:.0f}"),
+        row(f"analysis_kinded_deps_{n}step", t_kinds, ""),
+        row(f"analysis_sanitizer_{len(log)}ev", t_replay,
+            f"events_per_s={ev_per_s:.0f}"),
+    ]
+
+
+if __name__ == "__main__":
+    rows = main()
+    print("\n".join(rows))
+    if not SMOKE and SUMMARY["verify_1k_ms"] > VERIFY_BUDGET_S * 1e3:
+        raise SystemExit(
+            f"verify() took {SUMMARY['verify_1k_ms']:.1f} ms on a 1k-step "
+            f"DAG — budget is {VERIFY_BUDGET_S * 1e3:.0f} ms")
+
+# emlint (scripts/emlint.py) collects these for static verification
+EMLINT_WORKFLOWS = [lambda: make_layered_wf(100)]

@@ -153,3 +153,6 @@ def main() -> List[str]:
 
 if __name__ == "__main__":
     print("\n".join(main()))
+
+# emlint (scripts/emlint.py) collects these for static verification
+EMLINT_WORKFLOWS = [make_wide_wf]

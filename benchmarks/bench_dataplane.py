@@ -216,3 +216,6 @@ def main() -> List[str]:
 
 if __name__ == "__main__":
     print("\n".join(main()))
+
+EMLINT_WORKFLOWS = [lambda: make_tenant("lint"),   # emlint targets
+                    lambda: make_memo_tenant("lint")]

@@ -146,3 +146,5 @@ def main() -> List[str]:
 
 if __name__ == "__main__":
     print("\n".join(main()))
+
+EMLINT_WORKFLOWS = [lambda: make_tenant("lint")]   # emlint targets

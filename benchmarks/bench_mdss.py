@@ -61,3 +61,5 @@ def main() -> List[str]:
 
 if __name__ == "__main__":
     print("\n".join(main()))
+
+EMLINT_WORKFLOWS = [lambda: build(1)[0].pwf.workflow]   # emlint targets

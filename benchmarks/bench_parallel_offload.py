@@ -58,3 +58,6 @@ def main() -> List[str]:
 
 if __name__ == "__main__":
     print("\n".join(main()))
+
+EMLINT_WORKFLOWS = [lambda: make_wf(4, True, 0.0),   # emlint targets
+                    lambda: make_wf(4, False, 0.0)]

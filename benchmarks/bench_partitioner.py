@@ -57,3 +57,5 @@ def main() -> List[str]:
 
 if __name__ == "__main__":
     print("\n".join(main()))
+
+EMLINT_WORKFLOWS = [lambda: big_wf(64)]   # emlint targets

@@ -152,3 +152,5 @@ def main() -> List[str]:
 
 if __name__ == "__main__":
     print("\n".join(main()))
+
+EMLINT_WORKFLOWS = [lambda: make_mix(0.05)]   # emlint targets

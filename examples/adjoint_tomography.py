@@ -61,3 +61,11 @@ def main():
 
 if __name__ == "__main__":
     main()
+
+# emlint (scripts/emlint.py) collects these for static verification
+def _emlint_wf():
+    from repro.apps.adjoint_tomography import ATConfig, build_workflow
+    return build_workflow(ATConfig(nx=16, ny=8, nz=8, nt=10))
+
+
+EMLINT_WORKFLOWS = [_emlint_wf]

@@ -132,3 +132,13 @@ def main():
 
 if __name__ == "__main__":
     main()
+
+# emlint (scripts/emlint.py) collects these for static verification
+def _emlint_wf():
+    import types
+    stub = types.SimpleNamespace(prefill=lambda params, batch, cache:
+                                 (None, None))
+    return build_lm_workflow(stub)
+
+
+EMLINT_WORKFLOWS = [_emlint_wf]

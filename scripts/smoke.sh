@@ -14,12 +14,38 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== static analysis gate (emlint) =="
+# the lint must be able to lint itself (event/metric catalogue drift)...
+python scripts/emlint.py --self
+# ...and every example + benchmark workflow must verify clean (warnings
+# are errors here; W020 infos are allowed). fabric_quickstart spawns
+# worker processes at import and train/serve_lm build full models, so
+# they are exercised by their own smokes instead.
+python scripts/emlint.py --strict \
+    examples.quickstart examples.wide_dag examples.multi_tenant \
+    examples.adjoint_tomography \
+    benchmarks.bench_dag benchmarks.bench_runtime benchmarks.bench_locality \
+    benchmarks.bench_dataplane benchmarks.bench_parallel_offload \
+    benchmarks.bench_partitioner benchmarks.bench_mdss \
+    benchmarks.bench_analysis
+
+echo "== analysis bench (1k-step verify under its 100 ms budget) =="
+timeout 120 python -m benchmarks.bench_analysis
+
 echo "== tier-1 tests (fast lane) =="
 python -m pytest -x -q -m "not slow"
 
 echo "== tier-1 tests (slow-marked) =="
 # exit 5 = nothing currently carries the marker; that's fine
 python -m pytest -x -q -m "slow" || [ $? -eq 5 ]
+
+echo "== hazard sanitizer replay (fabric-backed tier-1 subset) =="
+# re-run the runtime/fabric/store suites with the happens-before
+# sanitizer replaying every submission's event + replica logs at
+# teardown — zero hazards is the pass criterion
+EMERALD_SANITIZE=1 python -m pytest -x -q \
+    tests/test_runtime.py tests/test_fabric.py tests/test_executor.py \
+    tests/test_locality.py tests/test_dataplane.py tests/test_analysis.py
 
 echo "== fabric smoke (2 workers) =="
 FABRIC_SMOKE=1 timeout 120 python - <<'EOF'

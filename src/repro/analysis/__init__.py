@@ -1,0 +1,24 @@
+"""Emerald correctness tooling: static verifier + dynamic sanitizer.
+
+Three entry points, one finding model (``repro.analysis.findings``):
+
+  * :func:`verify` — rule-based static lint over a :class:`Workflow`
+    (cycles with witness paths, dataflow races, offloadability,
+    memo-safety, residency-budget feasibility, dead code). Runs at
+    admission via ``EmeraldRuntime.submit(validate=...)`` and standalone
+    via ``scripts/emlint.py``.
+  * :mod:`sanitizer` — happens-before checker over a run's event log
+    and the MDSS replica-install log (``sanitizer.check(events)``,
+    ``sanitizer.check_store(mdss)``); the ``--sanitize`` pytest fixture
+    turns the whole tier-1 suite into a race detector.
+  * :mod:`selfcheck` — source lint keeping ``emit(`` kinds and metric
+    names in lockstep with their registries (``emlint --self``).
+
+This package depends only on ``repro.core.workflow`` /
+``repro.core.migration`` / ``repro.obs`` — never on the runtime — so the
+runtime can import it for admission-time validation without a cycle.
+"""
+from repro.analysis import sanitizer, selfcheck  # noqa: F401
+from repro.analysis.findings import (ERROR, INFO, RULES, WARNING,  # noqa: F401
+                                     Finding, RuleInfo, max_severity)
+from repro.analysis.verifier import WorkflowRejected, verify  # noqa: F401

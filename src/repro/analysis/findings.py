@@ -1,0 +1,171 @@
+"""Finding model + rule catalogue for Emerald's correctness tooling.
+
+Every check in this package — static verifier rules (``W``), dynamic
+sanitizer hazards (``H``) and source self-lint rules (``L``) — is
+registered here with a stable id, default severity, one-line title and a
+fix hint. A check reports a :class:`Finding` referencing its rule id, so
+consumers (``submit(validate=...)``, ``scripts/emlint.py``, the defect
+corpus under ``tests/defects/``) can match on ids instead of message
+text.
+
+Severities:
+
+  * ``error``   — the workflow/run is broken; ``submit(validate="error")``
+                  rejects it at admission.
+  * ``warning`` — almost certainly a bug (race, stale-memo risk) but the
+                  run can proceed; surfaced, never blocking by default.
+  * ``info``    — worth knowing (e.g. a remotable step that will fall
+                  back in-process); never blocking.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+ERROR = "error"
+WARNING = "warning"
+INFO = "info"
+
+_SEVERITIES = (ERROR, WARNING, INFO)
+
+
+@dataclass(frozen=True)
+class RuleInfo:
+    rule: str        # stable id, e.g. "W001"
+    severity: str    # default severity of findings from this rule
+    title: str       # short kebab-ish name, e.g. "cycle"
+    hint: str        # generic fix hint shown in the catalogue
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str                      # RuleInfo.rule
+    severity: str                  # error | warning | info
+    message: str                   # concrete, names the offending objects
+    steps: Tuple[str, ...] = ()    # step names involved (order meaningful)
+    uri: str = ""                  # offending variable/MDSS URI, if any
+    hint: str = ""                 # fix hint (defaults to the rule's)
+    where: str = ""                # file:line / source location, if known
+
+    def __str__(self):
+        loc = f" [{self.where}]" if self.where else ""
+        steps = f" steps={','.join(self.steps)}" if self.steps else ""
+        return (f"{self.rule} {self.severity}: {self.message}"
+                f"{steps}{loc}" + (f"\n      hint: {self.hint}"
+                                   if self.hint else ""))
+
+
+#: rule id -> RuleInfo; populated by the ``_rule`` calls below.
+RULES: Dict[str, RuleInfo] = {}
+
+
+def _rule(rule: str, severity: str, title: str, hint: str) -> str:
+    assert severity in _SEVERITIES and rule not in RULES
+    RULES[rule] = RuleInfo(rule, severity, title, hint)
+    return rule
+
+
+def finding(rule: str, message: str, steps=(), uri: str = "",
+            hint: str = "", where: str = "",
+            severity: str = "") -> Finding:
+    """Build a Finding for a registered rule (severity defaults to the
+    rule's; hint defaults to the rule's catalogue hint)."""
+    info = RULES[rule]
+    return Finding(rule, severity or info.severity, message,
+                   tuple(steps), uri, hint or info.hint, where)
+
+
+# ----------------------------------------------------------------- verifier
+W001 = _rule("W001", ERROR, "cycle",
+             "break the dependency cycle: some step must consume an "
+             "initial value (provide the variable at submit) instead of "
+             "a later step's output")
+W002 = _rule("W002", ERROR, "unbound-input",
+             "pass the variable in init_vars, publish() it into the "
+             "shared namespace, or add a step that writes it first")
+W003 = _rule("W003", ERROR, "no-impl",
+             "give the step a fn= callable or a remote_impl= registry "
+             "name")
+W004 = _rule("W004", WARNING, "unknown-remote-impl",
+             "register the name with repro.cloud.tasklib.register_step "
+             "(or list its module in Fabric(init_modules=...))")
+W005 = _rule("W005", ERROR, "signature-mismatch",
+             "make the fn's parameters match the step's declared inputs "
+             "(staging calls fn(**{input: value}))")
+W010 = _rule("W010", WARNING, "ww-hazard",
+             "make the second writer read the first version (true "
+             "dataflow), or drop one of the writes — the final version "
+             "is otherwise ordered only by declaration-order fencing")
+W011 = _rule("W011", WARNING, "rw-hazard",
+             "make the overwriter consume the reader's output so the "
+             "read-before-overwrite ordering is real dataflow, not just "
+             "a scheduler fence")
+W012 = _rule("W012", WARNING, "dead-write",
+             "no step reads this version before it is overwritten — "
+             "drop the write or route a reader to it")
+W020 = _rule("W020", INFO, "not-fabric-runnable",
+             "the step will fall back in-process on fabric-backed "
+             "tiers; register a remote_impl or use a module-level "
+             "picklable fn to ship it to workers")
+W021 = _rule("W021", WARNING, "device-capture",
+             "the fn closes over a device array; pass it as a declared "
+             "input instead so staging manages placement and the "
+             "closure stays shippable")
+W030 = _rule("W030", WARNING, "memo-unsafe",
+             "a memoizable step must read only its declared inputs; "
+             "move captured state into inputs or set memoizable=False")
+W031 = _rule("W031", WARNING, "memo-no-output",
+             "memoization keys on output names — a step with no outputs "
+             "is never memoized; declare outputs or drop memoizable")
+W040 = _rule("W040", WARNING, "budget-infeasible",
+             "declared residency_budget is smaller than the bytes the "
+             "workflow declares it will materialise on that tier — the "
+             "run will thrash the evictor; raise the budget or shrink "
+             "bytes_hint")
+W041 = _rule("W041", WARNING, "budget-unknown-tier",
+             "residency_budget names a tier the runtime does not have; "
+             "the budget will never be enforced")
+W050 = _rule("W050", INFO, "dead-step",
+             "no final output is reachable from this step's outputs — "
+             "it burns a lane slot for nothing; drop it or consume its "
+             "outputs")
+
+# ---------------------------------------------------------------- sanitizer
+H101 = _rule("H101", ERROR, "duplicate-done",
+             "a step completed more times than it was dispatched — a "
+             "replayed/forged completion got past the runtime's "
+             "outstanding-set guard")
+H102 = _rule("H102", ERROR, "orphan-completion",
+             "a completion arrived for a step never granted a lane slot "
+             "— the event stream violates dispatch -> done ordering")
+H103 = _rule("H103", ERROR, "lost-completion",
+             "a dispatched step never reported done in a run that "
+             "finished successfully — a completion was dropped")
+H110 = _rule("H110", ERROR, "install-regression",
+             "a tier's replica of a URI went backwards in version within "
+             "one namespace epoch — a stale transfer overwrote a newer "
+             "write (version-hazard fence failed)")
+H111 = _rule("H111", ERROR, "evict-install-race",
+             "a replica version was evicted that was never installed on "
+             "that tier — eviction raced an in-flight install")
+
+# ---------------------------------------------------------------- selfcheck
+L001 = _rule("L001", ERROR, "unregistered-event-kind",
+             "add the kind to repro.obs.events.EVENT_SCHEMA with its "
+             "required/optional info keys")
+L002 = _rule("L002", ERROR, "unregistered-metric",
+             "add the name to repro.obs.metrics.METRIC_CATALOG with a "
+             "one-line doc")
+
+
+def max_severity(findings) -> str:
+    """Worst severity present ('' when findings is empty)."""
+    worst = ""
+    for f in findings:
+        if f.severity == ERROR:
+            return ERROR
+        if f.severity == WARNING:
+            worst = WARNING
+        elif not worst:
+            worst = INFO
+    return worst

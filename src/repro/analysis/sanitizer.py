@@ -1,0 +1,153 @@
+"""Happens-before hazard sanitizer over the runtime's event stream.
+
+The PR-6 observability layer gives every run an ordered event log and
+the MDSS a replica install/eviction log. This module replays those logs
+through a vector-clock-lite checker: per step it pairs ``dispatch``
+(lane grant) with ``step_done`` (result committed); per ``(uri, tier,
+namespace-epoch)`` it demands monotone replica versions and
+install-before-evict ordering. Violations are the concurrency bugs the
+runtime's guards exist to prevent — a clean production run must produce
+zero findings, which is exactly what the opt-in pytest fixture
+(``--sanitize`` / ``EMERALD_SANITIZE=1``, see ``tests/conftest.py``)
+asserts over every fabric-backed tier-1 test.
+
+Hazard classes (catalogue in ``repro.analysis.findings``):
+
+  * H101 duplicate-done    — more completions than dispatches for a step
+  * H102 orphan-completion — completion for a never-dispatched step
+  * H103 lost-completion   — dispatch without completion in a run that
+                             finished successfully
+  * H110 install-regression — replica version decreased within one
+                             ``(uri, tier, namespace epoch)``
+  * H111 evict-install-race — eviction of a replica version never
+                             installed on that tier
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Tuple
+
+from repro.analysis import findings as F
+from repro.analysis.findings import Finding, finding
+
+
+def _field(e, name, default=None):
+    if isinstance(e, dict):
+        return e.get(name, default)
+    return getattr(e, name, default)
+
+
+def check(events: Iterable, *, completed_run: bool = True
+          ) -> List[Finding]:
+    """Replay a run's event log; return happens-before violations.
+
+    ``events``: Event objects (or dicts) with ``kind``/``step``/``t``.
+    The log may concatenate several sequential runs (the compat shim
+    reuses one sink): pairing is by count, so N dispatches matched by N
+    completions stay clean regardless of interleaving. Set
+    ``completed_run=False`` for failed/cancelled runs, where a dispatch
+    legitimately never reports done (H103 is skipped).
+    """
+    evs = sorted(events, key=lambda e: _field(e, "t", 0.0) or 0.0)
+    dispatched: Dict[str, int] = {}     # step -> dispatches seen so far
+    pending: Dict[str, int] = {}        # step -> dispatches awaiting done
+    out: List[Finding] = []
+    for e in evs:
+        kind = _field(e, "kind")
+        step = _field(e, "step", "")
+        if kind == "dispatch":
+            dispatched[step] = dispatched.get(step, 0) + 1
+            pending[step] = pending.get(step, 0) + 1
+        elif kind == "step_done":
+            if pending.get(step, 0) > 0:
+                pending[step] -= 1
+            elif dispatched.get(step, 0) > 0:
+                out.append(finding(
+                    F.H101,
+                    f"step {step} reported done more often than it was "
+                    "dispatched (double completion)",
+                    steps=(step,)))
+            else:
+                out.append(finding(
+                    F.H102,
+                    f"step {step} reported done but was never "
+                    "dispatched", steps=(step,)))
+    if completed_run:
+        for step, n in sorted(pending.items()):
+            if n > 0:
+                out.append(finding(
+                    F.H103,
+                    f"step {step} was dispatched but never reported "
+                    f"done ({n} completion(s) missing) in a run that "
+                    "finished successfully", steps=(step,)))
+    return out
+
+
+def check_store(mdss_or_installs, evictions=None, *,
+                complete: bool = True) -> List[Finding]:
+    """Replay an MDSS replica log; return version-ordering violations.
+
+    Pass an ``MDSS`` (its ``install_events`` / ``eviction_events`` /
+    ``installs_total`` are read), or explicit row lists: installs
+    ``(uri, tier, version, epoch, t)`` and evictions ``(uri, tier,
+    bytes, version, epoch, t)``. ``complete=False`` (set automatically
+    when the store's bounded log has been trimmed) skips H111, which
+    needs the full install history to judge an eviction.
+    """
+    if evictions is None and hasattr(mdss_or_installs, "install_events"):
+        m = mdss_or_installs
+        installs = list(m.install_events)
+        evictions = list(getattr(m, "eviction_events", ()))
+        complete = complete and \
+            getattr(m, "installs_total", len(installs)) == len(installs)
+    else:
+        installs = list(mdss_or_installs)
+        evictions = list(evictions or ())
+
+    out: List[Finding] = []
+    # Merge both logs on t so "prior install" means prior in time.
+    rows = [(r[4], 0, r) for r in installs] + \
+           [(r[5], 1, r) for r in evictions]
+    rows.sort(key=lambda x: (x[0], x[1]))
+    high: Dict[Tuple[str, str, int], int] = {}   # (uri,tier,epoch) -> max v
+    seen: set = set()                            # installed (uri,tier,v,ep)
+    for _, which, r in rows:
+        if which == 0:
+            uri, tier, version, epoch = r[0], r[1], r[2], r[3]
+            key = (uri, tier, epoch)
+            prev = high.get(key)
+            if prev is not None and version < prev:
+                out.append(finding(
+                    F.H110,
+                    f"{uri} on tier {tier} regressed from version "
+                    f"{prev} to {version} within namespace epoch "
+                    f"{epoch} — a stale install overwrote a newer "
+                    "write", uri=uri))
+            if prev is None or version > prev:
+                high[key] = version
+            seen.add((uri, tier, version, epoch))
+        else:
+            uri, tier, version, epoch = r[0], r[1], r[3], r[4]
+            if complete and (uri, tier, version, epoch) not in seen:
+                out.append(finding(
+                    F.H111,
+                    f"{uri} version {version} was evicted from tier "
+                    f"{tier} (epoch {epoch}) but that version was "
+                    "never installed there — eviction raced an "
+                    "in-flight install", uri=uri))
+    return out
+
+
+def check_runtime(runtime, handles) -> List[Finding]:
+    """Convenience: sanitize finished ``handles`` of ``runtime`` plus
+    its store's replica log. Only runs that finished successfully are
+    paired strictly (failed/cancelled runs legitimately drop dones)."""
+    out: List[Finding] = []
+    for h in handles:
+        state = getattr(h, "state", "done")
+        if state in ("failed", "cancelled"):
+            continue
+        out.extend(check(h.events, completed_run=(state == "done")))
+    mdss = getattr(runtime, "mdss", None)
+    if mdss is not None:
+        out.extend(check_store(mdss))
+    return out

@@ -1,0 +1,71 @@
+"""Source self-lint: keep emitted telemetry and its registries in sync.
+
+Greps ``src/`` for telemetry call sites and checks each against its
+registry — the contract that every event kind and metric name the code
+can produce is documented:
+
+  * L001 — ``emit(<kind literal>, ...)`` call sites vs
+    ``repro.obs.events.EVENT_SCHEMA``
+  * L002 — ``inc("name")`` / ``observe("name")`` / ``gauge("name")`` /
+    ``set("name")`` call sites vs ``repro.obs.metrics.METRIC_CATALOG``.
+    Metric names are dotted by convention; undotted string args to these
+    methods (unrelated ``set(...)`` calls etc.) are ignored.
+
+This is the PR-6 grep-lint test promoted to a proper rule: the pytest
+wrapper in ``tests/test_obs.py`` and ``emlint --self`` both call
+:func:`check_source`.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import List, Optional
+
+from repro.analysis import findings as F
+from repro.analysis.findings import Finding, finding
+
+_EMIT_RE = re.compile(r"""\bemit\(\s*f?["']([a-z_]+)["']""")
+_METRIC_RE = re.compile(
+    r"""\b(?:inc|observe|gauge|set)\(\s*f?["']([A-Za-z0-9_.]+)["']""")
+
+
+def default_src_dir() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))   # .../src/repro/analysis
+    return os.path.dirname(os.path.dirname(here))       # .../src
+
+
+def check_source(src_dir: Optional[str] = None) -> List[Finding]:
+    """Lint every ``.py`` under ``src_dir`` (default: this tree's
+    ``src/``); returns one finding per unregistered call site."""
+    from repro.obs.events import EVENT_SCHEMA
+    from repro.obs.metrics import METRIC_CATALOG
+
+    src_dir = src_dir or default_src_dir()
+    out: List[Finding] = []
+    for root, _dirs, files in os.walk(src_dir):
+        for fname in sorted(files):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(root, fname)
+            rel = os.path.relpath(path, src_dir)
+            with open(path, encoding="utf-8") as fh:
+                for lineno, line in enumerate(fh, 1):
+                    for m in _EMIT_RE.finditer(line):
+                        kind = m.group(1)
+                        if kind not in EVENT_SCHEMA:
+                            out.append(finding(
+                                F.L001,
+                                f"emit({kind!r}) is not registered in "
+                                "EVENT_SCHEMA",
+                                uri=kind, where=f"{rel}:{lineno}"))
+                    for m in _METRIC_RE.finditer(line):
+                        name = m.group(1)
+                        if "." not in name:
+                            continue
+                        if name not in METRIC_CATALOG:
+                            out.append(finding(
+                                F.L002,
+                                f"metric {name!r} is not registered in "
+                                "METRIC_CATALOG",
+                                uri=name, where=f"{rel}:{lineno}"))
+    return out

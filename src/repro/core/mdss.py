@@ -170,7 +170,14 @@ class MDSS:
         self._evict_pending: set = set()   # (ns, tier) enforcement scheduled
         self.evictions: int = 0
         self.eviction_bytes: int = 0       # cumulative churn (autoscaler feed)
+        # rows: (uri, tier, bytes, version, ns_epoch, t) — bounded below
         self.eviction_events: list = []    # bounded like sync_events
+        # replica-install log consumed by the hazard sanitizer
+        # (repro.analysis.sanitizer): rows (uri, tier, version, ns_epoch, t).
+        # installs_total keeps the true count so a consumer can tell when
+        # the bounded list has been trimmed and skip install-order checks.
+        self.install_events: list = []
+        self.installs_total: int = 0
         # per-tier chunk index: digest -> [refcount, length]. Kept in
         # lockstep with ``copies`` by _set_copy/_del_copy, same as the
         # residency byte counters — chunks leave the index exactly when
@@ -603,6 +610,13 @@ class MDSS:
             self._ns_tier_bytes.get(key, 0) + nbytes_of(value)
         if self.chunk_dedup:
             self._chunks_retain(tier, uri, version, value)
+        self.installs_total += 1
+        self.install_events.append(
+            (uri, tier, version, self._ns_epoch.get(key[0], 0),
+             time.perf_counter()))
+        if len(self.install_events) > self.sync_events_cap:
+            del self.install_events[
+                :len(self.install_events) - self.sync_events_cap]
         self._touch(uri, tier)
         self._maybe_schedule_eviction(*key)
 
@@ -752,7 +766,10 @@ class MDSS:
                 self.eviction_bytes += n
                 evicted_n += 1
                 evicted_b += n
-                self.eviction_events.append((victim, tier, n))
+                self.eviction_events.append(
+                    (victim, tier, n, tcopy[0],
+                     self._ns_epoch.get(namespace_of(victim), 0),
+                     time.perf_counter()))
                 if len(self.eviction_events) > self.sync_events_cap:
                     del self.eviction_events[
                         :len(self.eviction_events) - self.sync_events_cap]
@@ -892,6 +909,8 @@ class MDSS:
         self.evictions = 0
         self.eviction_bytes = 0
         self.eviction_events.clear()
+        self.install_events.clear()
+        self.installs_total = 0
 
 
 class NamespacedMDSS:

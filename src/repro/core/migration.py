@@ -43,6 +43,7 @@ leave memoization off (``memoizable=False`` overrides a manager-wide
 """
 from __future__ import annotations
 
+import pickle
 import threading
 import time
 from collections import OrderedDict
@@ -91,6 +92,60 @@ def step_code_key(step: Step):
     if stateless:
         return ("code", code, id(getattr(fn, "__globals__", None)))
     return ("id", id(fn))
+
+
+_IMMUTABLE_CAPTURE = (int, float, complex, bool, str, bytes, frozenset,
+                      tuple, type(None))
+
+
+def fabric_runnable_reason(step: Step) -> Optional[str]:
+    """``None`` if ``step`` could execute in a fabric worker, else a
+    one-line reason. Mirrors ``Fabric.can_run`` without needing a live
+    fabric, so the static verifier shares the dispatcher's judgement."""
+    if getattr(step, "remote_impl", None):
+        return None
+    if step.fn is None:
+        return "no fn and no remote_impl"
+    if getattr(step, "jax_step", True):
+        return "jax step (mesh-placed in-process by design)"
+    try:
+        pickle.dumps(step.fn)
+        return None
+    except Exception as exc:
+        return f"fn is not picklable ({type(exc).__name__}: {exc})"
+
+
+def memo_unsafe_reasons(step: Step) -> list:
+    """Why memoizing ``step`` could serve stale results: state the step's
+    fn reads that the memo key ``(code fingerprint, input digests,
+    outputs)`` cannot see. Immutable scalar captures are fine — a closure
+    keys by object identity, which pins them — but a *mutable* capture
+    (list/dict/array/object) can change between calls under one key."""
+    fn = step.fn
+    if fn is None:
+        return []
+    reasons = []
+    cells = getattr(fn, "__closure__", None)
+    if cells:
+        names = getattr(getattr(fn, "__code__", None), "co_freevars", ())
+        for name, cell in zip(names, cells):
+            try:
+                v = cell.cell_contents
+            except ValueError:      # unfilled cell
+                reasons.append(f"closes over unfilled cell {name!r}")
+                continue
+            if not isinstance(v, _IMMUTABLE_CAPTURE):
+                reasons.append(
+                    f"closes over mutable {type(v).__name__} {name!r}")
+    for v in (getattr(fn, "__defaults__", None) or ()):
+        if not isinstance(v, _IMMUTABLE_CAPTURE):
+            reasons.append(f"mutable default of type {type(v).__name__}")
+    for v in (getattr(fn, "__kwdefaults__", None) or {}).values():
+        if not isinstance(v, _IMMUTABLE_CAPTURE):
+            reasons.append(f"mutable kw default of type {type(v).__name__}")
+    if getattr(fn, "__self__", None) is not None:
+        reasons.append("bound method: instance state is outside the key")
+    return reasons
 
 
 @dataclass

@@ -72,6 +72,7 @@ import pickle
 import queue
 import threading
 import time
+import warnings
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -93,9 +94,9 @@ from repro.obs.tracing import Tracer, wall_now
 
 @dataclass
 class Event:
-    kind: str          # suspend | offload | resume | local | retry |
-                       # speculate | prefetch | checkpoint | place |
-                       # step_done — schema in repro.obs.events
+    kind: str          # dispatch | suspend | offload | resume | local |
+                       # retry | speculate | prefetch | checkpoint |
+                       # place | step_done — schema in repro.obs.events
     step: str
     tier: str = ""
     t: float = 0.0      # perf_counter: monotonic, for intra-process deltas
@@ -220,6 +221,7 @@ class RunHandle:
         self.run_id = run_id
         self.namespace = namespace
         self.events = events
+        self.findings = []          # verifier findings (submit(validate=...))
         self._runtime = runtime
         self._done = threading.Event()
         self._result: Optional[dict] = None
@@ -445,7 +447,7 @@ class EmeraldRuntime:
                speculate_after=_AUTO, prefetch: Optional[bool] = None,
                checkpointer: Optional[RunCheckpointer] = None,
                events: Optional[List[Event]] = None,
-               on_done=None) -> RunHandle:
+               on_done=None, validate: str = "error") -> RunHandle:
         """Enqueue a workflow for concurrent execution (non-blocking).
 
         ``workflow`` may be a :class:`Workflow` (partitioned here) or an
@@ -465,6 +467,14 @@ class EmeraldRuntime:
         declared budgets of every admitted run — so a burst of small-now
         grow-later tenants is refused up front instead of thrashing the
         evictor mid-run. Returns a :class:`RunHandle`.
+
+        ``validate`` runs the static verifier (``repro.analysis``) at
+        admission: ``"error"`` (default) raises
+        :class:`~repro.analysis.WorkflowRejected` on error-severity
+        findings before any state is touched, ``"warn"`` admits and
+        records every finding on ``handle.findings`` (plus a
+        ``UserWarning`` when errors were found), ``"off"`` skips the
+        pass. Warnings/infos never block in any mode.
         """
         if self._closed:
             raise RuntimeClosed("runtime is closed")
@@ -515,7 +525,7 @@ class EmeraldRuntime:
             return self._submit_admitted(
                 pwf, wf, run_id, ns, mdss, init_vars, residency_budget,
                 policy, fetch, resume, weight, priority, speculate_after,
-                prefetch, checkpointer, events, on_done)
+                prefetch, checkpointer, events, on_done, validate)
         except BaseException:
             # anything that fails between admission and the driver taking
             # ownership must release the reservation — a leak here would
@@ -527,10 +537,20 @@ class EmeraldRuntime:
     def _submit_admitted(self, pwf, wf, run_id, ns, mdss, init_vars,
                          residency_budget, policy, fetch, resume, weight,
                          priority, speculate_after, prefetch, checkpointer,
-                         events, on_done) -> RunHandle:
+                         events, on_done, validate="error") -> RunHandle:
         if residency_budget:
             for tier_name, max_bytes in residency_budget.items():
                 self.mdss.set_namespace_budget(ns, tier_name, max_bytes)
+        try:
+            findings = self._validate_submission(
+                wf, mdss, init_vars, residency_budget, resume, validate)
+        except BaseException:
+            # a rejected submission must leave no trace: clear the
+            # budgets this call just configured (nothing else landed yet
+            # — validation runs before the init_vars puts)
+            for tier_name in (residency_budget or ()):
+                self.mdss.set_namespace_budget(ns, tier_name, None)
+            raise
 
         completed: set = set()
         for uri, val in (init_vars or {}).items():
@@ -578,6 +598,7 @@ class EmeraldRuntime:
 
         sink = events if events is not None else []
         handle = RunHandle(run_id, ns, self, sink)
+        handle.findings = findings
         # installed before the run can possibly finalize — no TOCTOU
         handle._on_done = on_done
         # one trace per run: the root "run" span's identity is allocated
@@ -604,6 +625,43 @@ class EmeraldRuntime:
         if self._closed and not self._driver.is_alive():
             self._flush_orphaned_inbox()
         return handle
+
+    def _validate_submission(self, wf, mdss, init_vars, residency_budget,
+                             resume, validate):
+        """Admission-time static verification (repro.analysis). Runs
+        before ANY submission state lands (budgets, init_vars puts), so
+        a rejection leaves the runtime and store untouched."""
+        if validate not in ("error", "warn", "off"):
+            raise ValueError(
+                f"validate must be 'error', 'warn' or 'off', "
+                f"not {validate!r}")
+        if validate == "off":
+            return []
+        from repro.analysis.verifier import WorkflowRejected, verify
+        provided = None
+        if not resume:
+            # the bound set: explicit init vars plus whatever is already
+            # resident for this run's namespace (warm resubmission /
+            # shared-namespace fall-through)
+            provided = set(init_vars or ())
+            provided |= {u for u in wf.variables
+                         if u not in provided and mdss.version(u)}
+        findings = verify(wf, provided=provided,
+                          residency_budget=residency_budget,
+                          tiers=self.manager.tiers,
+                          capacity_bytes=self.mdss.capacity_bytes)
+        errors = [f for f in findings if f.severity == "error"]
+        if errors:
+            if validate == "error":
+                self.metrics.inc("runtime.submissions_rejected")
+                raise WorkflowRejected(wf.name, findings)
+            warnings.warn(
+                f"emerald verifier: workflow {wf.name!r} admitted with "
+                f"{len(errors)} error-severity finding(s) "
+                f"(validate='warn'): "
+                + "; ".join(f"{f.rule} {f.message}" for f in errors),
+                stacklevel=3)
+        return findings
 
     def publish(self, uri: str, value, tier: str = "local") -> int:
         """Write warm cross-run data into the shared namespace: every
@@ -941,6 +999,8 @@ class EmeraldRuntime:
                              reason=decision.reason, scores=decision.scores,
                              stale_bytes=decision.stale_bytes)
                 self._prefetch_successors(run, s)
+                run.emit("dispatch", s.name, run.placed.get(name, ""),
+                         lane="offload" if lane else "local")
                 if lane:
                     run.emit("suspend", s.name)
                 run.inflight += 1

@@ -17,14 +17,27 @@ between them are *parallel* and may offload concurrently (paper Fig 9b).
 from __future__ import annotations
 
 import dataclasses
+import sys
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+def _call_site(depth: int = 2) -> str:
+    """``file:line`` of the caller ``depth`` frames up (best effort)."""
+    try:
+        f = sys._getframe(depth)
+        return f"{f.f_code.co_filename}:{f.f_lineno}"
+    except Exception:
+        return ""
 
 
 @dataclass
 class Variable:
     name: str
     scope: Tuple[str, ...] = ()     # path of enclosing step names; () = top
+    defined_at: str = ""            # "file:line" of the declaring call
+    implicit: bool = False          # auto-declared as a step output (never
+                                    # part of the workflow's input surface)
 
 
 @dataclass
@@ -46,6 +59,7 @@ class Step:
     # memoize=True runtime), None defers to the manager-wide default.
     # Only set True for deterministic, side-effect-free steps.
     memoizable: Optional[bool] = None
+    defined_at: str = ""                       # "file:line" of wf.step(...)
 
     def scope(self, wf: "Workflow") -> Tuple[str, ...]:
         """Path of enclosing steps."""
@@ -79,29 +93,49 @@ class Workflow:
 
     # ------------------------------------------------------------- builders
     def var(self, name: str, scope: Tuple[str, ...] = ()) -> "Workflow":
+        site = _call_site()
         if name in self.variables:
-            raise WorkflowError(f"variable {name} redefined")
-        self.variables[name] = Variable(name, tuple(scope))
+            prev = self.variables[name].defined_at or "<unknown site>"
+            raise WorkflowError(
+                f"variable {name} redefined at {site or '<unknown site>'}; "
+                f"first declared at {prev}")
+        self.variables[name] = Variable(name, tuple(scope), defined_at=site)
         return self
 
     def step(self, name: str, fn=None, *, inputs=(), outputs=(),
              remotable: Optional[bool] = None, parent=None, **kw) -> Step:
+        site = _call_site()
         if name in self.steps:
-            raise WorkflowError(f"step {name} redefined")
+            prev = self.steps[name].defined_at or "<unknown site>"
+            raise WorkflowError(
+                f"step {name} redefined at {site or '<unknown site>'}; "
+                f"first defined at {prev}")
         if parent is not None and parent not in self.steps:
             raise WorkflowError(f"unknown parent step {parent}")
+        outputs = tuple(outputs)
+        seen: set = set()
+        for out in outputs:
+            if out in seen:
+                raise WorkflowError(
+                    f"step {name} (at {site or '<unknown site>'}) declares "
+                    f"output {out} more than once; a step publishes exactly "
+                    "one version per output URI")
+            seen.add(out)
         if remotable is None:
             remotable = bool(getattr(fn, "__emerald_remotable__", False))
         hints = dict(getattr(fn, "__emerald_hints__", {}))
         hints.update(kw)
-        s = Step(name, fn, tuple(inputs), tuple(outputs), remotable,
+        hints.setdefault("defined_at", site)
+        s = Step(name, fn, tuple(inputs), outputs, remotable,
                  parent=parent, **hints)
         self.steps[name] = s
         self.order.append(name)
         # implicitly declare output variables at the step's level
         for out in s.outputs:
             if out not in self.variables:
-                self.variables[out] = Variable(out, s.scope(self))
+                self.variables[out] = Variable(out, s.scope(self),
+                                               defined_at=site,
+                                               implicit=True)
         return s
 
     # ------------------------------------------------------------ structure
@@ -118,7 +152,7 @@ class Workflow:
             out.extend(self.descendants(c.name))
         return out
 
-    def dependencies(self) -> Dict[str, set]:
+    def dependencies(self, kinds: bool = False):
         """Dataflow DAG over top-level steps.
 
         Edges: read-after-write (a reader depends on the latest writer),
@@ -128,25 +162,34 @@ class Workflow:
         earlier reader's input). All edges point from earlier to later
         steps in declaration order, so ``order`` is a valid topological
         order of this DAG.
+
+        With ``kinds=True`` each edge carries its hazard kinds instead of
+        being a bare name: ``{step: {dep: frozenset({"RAW","WAR","WW"})}}``.
+        RAW edges are true dataflow; WAR/WW edges are anti-dependency
+        fences the scheduler inserts to serialise conflicting versions.
         """
-        deps: Dict[str, set] = {}
+        kinded: Dict[str, Dict[str, set]] = {}
         last_writer: Dict[str, str] = {}
         readers: Dict[str, List[str]] = {}     # readers since the last write
         for s in self.toplevel():
-            deps[s.name] = set()
+            edges = kinded.setdefault(s.name, {})
             for v in s.inputs:
                 if v in last_writer:
-                    deps[s.name].add(last_writer[v])
+                    edges.setdefault(last_writer[v], set()).add("RAW")
                 readers.setdefault(v, []).append(s.name)
             for v in s.outputs:
-                if v in last_writer:          # write-after-write ordering
-                    deps[s.name].add(last_writer[v])
+                if v in last_writer and last_writer[v] != s.name:
+                    # write-after-write ordering
+                    edges.setdefault(last_writer[v], set()).add("WW")
                 for r in readers.get(v, ()):  # write-after-read ordering
                     if r != s.name:
-                        deps[s.name].add(r)
+                        edges.setdefault(r, set()).add("WAR")
                 readers[v] = []               # new version: no readers yet
                 last_writer[v] = s.name
-        return deps
+        if kinds:
+            return {n: {d: frozenset(ks) for d, ks in es.items()}
+                    for n, es in kinded.items()}
+        return {n: set(es) for n, es in kinded.items()}
 
     def successors(self, deps: Optional[Dict[str, set]] = None
                    ) -> Dict[str, set]:

@@ -30,6 +30,10 @@ def _s(kind: str, required=(), optional=(), doc: str = "") -> EventSchema:
 
 #: kind -> schema, one row per ``emit(`` call-site kind in src/.
 EVENT_SCHEMA: Dict[str, EventSchema] = {e.kind: e for e in [
+    _s("dispatch",
+       required=("lane",),
+       doc="Driver granted the step a lane slot — the happens-before "
+           "anchor the hazard sanitizer pairs with step_done."),
     _s("place",
        required=("reason",),
        optional=("scores", "stale_bytes"),

@@ -189,3 +189,60 @@ class MetricsRegistry:
 # Process-wide default registry; runtimes default to their own private
 # registry (cross-test isolation) but share this one when asked.
 REGISTRY = MetricsRegistry()
+
+
+#: name -> one-line doc, one row per metric name used in src/. The
+#: ``emlint --self`` L002 rule (``repro.analysis.selfcheck``) greps the
+#: source tree for ``inc("/observe("/gauge("/set("`` call sites and fails
+#: on any dotted metric name missing from this table — same contract as
+#: ``EVENT_SCHEMA`` for event kinds.
+METRIC_CATALOG: Dict[str, str] = {
+    "autoscaler.desired_workers": "Autoscaler's current target pool size.",
+    "autoscaler.scale_ups": "Scale-up decisions taken.",
+    "autoscaler.scale_downs": "Scale-down decisions taken.",
+    "autoscaler.ticks": "Autoscaler control-loop iterations.",
+    "broker.queue_depth": "Tasks waiting for a worker.",
+    "broker.inflight": "Tasks currently executing on workers.",
+    "broker.num_workers": "Live workers attached to the broker.",
+    "broker.num_workers_with_warm": "Workers holding a warm module set.",
+    "broker.idle_workers": "Workers with no task in flight.",
+    "broker.tasks_done": "Tasks completed successfully.",
+    "broker.tasks_requeued": "Tasks requeued after worker loss/failure.",
+    "broker.tasks_cancelled": "Tasks cancelled before completion.",
+    "broker.workers_lost": "Workers declared dead by heartbeat.",
+    "broker.warm_hits": "Tasks routed to a warm worker.",
+    "compile_cache.entries": "Compiled-executable cache entries.",
+    "compile_cache.hits": "Compiled-executable cache hits.",
+    "mdss.resident_bytes": "Bytes resident across tiers.",
+    "mdss.bytes_moved": "Bytes transferred between tiers.",
+    "mdss.modeled_seconds": "Cost-model seconds charged to transfers.",
+    "mdss.prefetch_ops": "Prefetch operations issued.",
+    "mdss.prefetch_bytes": "Bytes moved by prefetch.",
+    "mdss.fenced_puts": "Fenced put_many publishes.",
+    "mdss.evictions": "Replicas evicted by residency budgets.",
+    "mdss.eviction_bytes": "Bytes reclaimed by eviction.",
+    "mdss.dedup_bytes_elided": "Bytes elided by content-chunk dedup.",
+    "mdss.entries": "Distinct URIs tracked by the store.",
+    "mdss.chunk_index_bytes": "Bytes held by the chunk dedup index.",
+    "memo.entries": "Cross-run memo table entries.",
+    "memo.bytes": "Bytes held by the memo table.",
+    "memo.hits": "Step executions answered from the memo table.",
+    "memo.waits": "Executions that waited on an in-flight memo twin.",
+    "pool.spawned_total": "Worker processes spawned over the pool's life.",
+    "pool.pending_hellos": "Spawned workers not yet handshaken.",
+    "runtime.active_runs": "Admitted, unfinished runs.",
+    "runtime.offload_backlog": "Ready offload-lane steps awaiting a slot.",
+    "runtime.lane_busy.offload": "Busy offload-lane slots.",
+    "runtime.lane_busy.local": "Busy local-lane slots.",
+    "runtime.runs_completed": "Runs finished (done/failed/cancelled).",
+    "runtime.steps_dispatched": "Steps handed to a lane executor.",
+    "runtime.steps_completed": "Steps whose results were committed.",
+    "runtime.step_retries": "Step re-executions after failure.",
+    "runtime.submissions_rejected": "Workflows rejected by the verifier.",
+    "scheduler.fair_share": "Fair-share scheduler pass statistics.",
+    "wire.bytes_sent": "Bytes written to worker sockets.",
+    "wire.bytes_received": "Bytes read from worker sockets.",
+    "wire.dedup_saved_bytes": "Wire bytes elided by chunk dedup.",
+    "wire.dedup_chunks": "Chunks answered from the receiver's cache.",
+    "wire.dedup_hit_rate": "Fraction of chunks deduped on the wire.",
+}

@@ -42,3 +42,51 @@ def make_emerald(policy="annotate", **kw):
     mdss = MDSS(tiers, cost_model=cm)
     mgr = MigrationManager(tiers, mdss, cm)
     return tiers, cm, mdss, mgr
+
+
+# --------------------------------------------------------------------------
+# opt-in happens-before hazard sanitizer (repro.analysis.sanitizer):
+# --sanitize / EMERALD_SANITIZE=1 replays every runtime submission's event
+# log and every store's replica log at test teardown, turning the whole
+# suite into a race detector. Zero hazards is the pass criterion.
+# --------------------------------------------------------------------------
+def pytest_addoption(parser):
+    parser.addoption(
+        "--sanitize", action="store_true", default=False,
+        help="run the happens-before hazard sanitizer over every "
+             "EmeraldRuntime submission (also: EMERALD_SANITIZE=1)")
+
+
+@pytest.fixture(autouse=True)
+def hazard_sanitizer(request, monkeypatch):
+    if not (request.config.getoption("--sanitize")
+            or os.environ.get("EMERALD_SANITIZE")):
+        yield
+        return
+    from repro.analysis import sanitizer
+    from repro.core.runtime import EmeraldRuntime
+
+    records = []          # (runtime, handle) per submission in this test
+    orig = EmeraldRuntime.submit
+
+    def spying_submit(self, workflow, *a, **kw):
+        h = orig(self, workflow, *a, **kw)
+        records.append((self, h))
+        return h
+
+    monkeypatch.setattr(EmeraldRuntime, "submit", spying_submit)
+    yield
+    findings = []
+    stores = {}
+    for rt, h in records:
+        # only runs that finished cleanly carry the full dispatch/done
+        # pairing contract; failed/cancelled runs legitimately drop dones
+        if getattr(h, "state", "") != "done":
+            continue
+        findings += sanitizer.check(h.events, completed_run=True)
+        stores[id(rt.mdss)] = rt.mdss
+    for mdss in stores.values():
+        findings += sanitizer.check_store(mdss)
+    if findings:
+        pytest.fail("hazard sanitizer: "
+                    + "; ".join(str(f) for f in findings), pytrace=False)

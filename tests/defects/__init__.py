@@ -1,0 +1,24 @@
+"""Seeded defect corpus for the analysis subsystem.
+
+One minimal *defective* workflow per verifier rule and one replayed
+event/replica log per sanitizer hazard class, each paired with a *clean
+twin* differing only in the defect. ``tests/test_analysis.py``
+parametrizes over :data:`CASES`, asserting the exact rule id fires on
+the defective artifact and stays silent on the twin — the
+failing-before test each rule was built against.
+
+A case is ``(rule_id, make_defective, make_clean)`` where the factories
+return either a kwargs dict for :func:`repro.analysis.verify` (lint
+cases: ``{"wf": Workflow, ...extra verify kwargs}``) or a kwargs dict
+for the sanitizer (hazard cases: ``{"events": [...]}`` /
+``{"installs": [...], "evictions": [...]}``).
+"""
+from . import hazards, lint_graph, lint_memo, lint_offload
+
+#: rule id -> (kind, make_defective, make_clean); kind in
+#: {"verify", "events", "store"}.
+CASES = {}
+CASES.update(lint_graph.CASES)
+CASES.update(lint_offload.CASES)
+CASES.update(lint_memo.CASES)
+CASES.update(hazards.CASES)

@@ -1,0 +1,90 @@
+"""Sanitizer hazard corpus: minimal replayed event / replica logs, one
+per hazard class, with clean twins that respect happens-before."""
+from repro.core.runtime import Event
+
+
+def _ev(kind, step, t, **info):
+    return Event(kind, step, "", t, info, t)
+
+
+def _dispatch(step, t, lane="offload"):
+    return _ev("dispatch", step, t, lane=lane)
+
+
+def _done(step, t):
+    return _ev("step_done", step, t, offloaded=True)
+
+
+# H101: one dispatch, two completions (a replayed done got through).
+def h101_defective():
+    return {"events": [_dispatch("s", 1.0), _done("s", 2.0),
+                       _done("s", 3.0)]}
+
+
+def h101_clean():
+    return {"events": [_dispatch("s", 1.0), _done("s", 2.0)]}
+
+
+# H102: a completion for a step never granted a lane slot.
+def h102_defective():
+    return {"events": [_dispatch("a", 1.0), _done("a", 2.0),
+                       _done("ghost", 3.0)]}
+
+
+def h102_clean():
+    return {"events": [_dispatch("a", 1.0), _done("a", 2.0),
+                       _dispatch("ghost", 2.5), _done("ghost", 3.0)]}
+
+
+# H103: a dispatched step never completes in a run that reported done.
+def h103_defective():
+    return {"events": [_dispatch("a", 1.0), _done("a", 2.0),
+                       _dispatch("lost", 2.5)]}
+
+
+def h103_clean():
+    # the same truncated log is legitimate for a cancelled/failed run
+    d = h103_defective()
+    d["completed_run"] = False
+    return d
+
+
+# H110: a tier's replica version regresses within one namespace epoch
+# (install rows: (uri, tier, version, epoch, t)).
+def h110_defective():
+    return {"installs": [("ns/u", "cloud", 1, 0, 1.0),
+                         ("ns/u", "cloud", 3, 0, 2.0),
+                         ("ns/u", "cloud", 2, 0, 3.0)],
+            "evictions": []}
+
+
+def h110_clean():
+    # same shape, but the "regression" is a new namespace epoch (the
+    # namespace was dropped and reused) plus a same-version re-install
+    return {"installs": [("ns/u", "cloud", 1, 0, 1.0),
+                         ("ns/u", "cloud", 3, 0, 2.0),
+                         ("ns/u", "cloud", 3, 0, 2.5),
+                         ("ns/u", "cloud", 2, 1, 3.0)],
+            "evictions": []}
+
+
+# H111: eviction of a replica version never installed on that tier
+# (eviction rows: (uri, tier, bytes, version, epoch, t)).
+def h111_defective():
+    return {"installs": [("ns/u", "cloud", 1, 0, 1.0)],
+            "evictions": [("ns/u", "cloud", 512, 2, 0, 2.0)]}
+
+
+def h111_clean():
+    return {"installs": [("ns/u", "cloud", 1, 0, 1.0),
+                         ("ns/u", "cloud", 2, 0, 1.5)],
+            "evictions": [("ns/u", "cloud", 512, 2, 0, 2.0)]}
+
+
+CASES = {
+    "H101": ("events", h101_defective, h101_clean),
+    "H102": ("events", h102_defective, h102_clean),
+    "H103": ("events", h103_defective, h103_clean),
+    "H110": ("store", h110_defective, h110_clean),
+    "H111": ("store", h111_defective, h111_clean),
+}

@@ -1,0 +1,129 @@
+"""Graph-shape defects: cycles, unbound reads, dataflow races, dead code.
+
+Each factory returns verify() kwargs. Step fns use **kw so only the
+graph shape differs between a defective workflow and its clean twin.
+"""
+from repro.core.workflow import Workflow
+
+
+def _fn(**kw):
+    return {}
+
+
+def _wf(name):
+    return Workflow(name)
+
+
+# W001: a reads b's output, b reads a's output; nothing provided, so the
+# declaration order "resolved" the forward read into a cycle.
+def w001_defective():
+    wf = _wf("cycle")
+    wf.step("a", _fn, inputs=("vb",), outputs=("va",))
+    wf.step("b", _fn, inputs=("va",), outputs=("vb",))
+    return {"wf": wf, "provided": set()}
+
+
+def w001_clean():
+    wf = _wf("cycle-clean")
+    wf.step("a", _fn, inputs=("vb",), outputs=("va",))
+    wf.step("b", _fn, inputs=("va",), outputs=("vb",))
+    return {"wf": wf, "provided": {"vb"}}   # feedback loop seeded at submit
+
+
+# W002: a step reads a declared variable nothing binds.
+def w002_defective():
+    wf = _wf("unbound")
+    wf.var("obs")
+    wf.step("fit", _fn, inputs=("obs",), outputs=("chi",))
+    return {"wf": wf, "provided": set()}
+
+
+def w002_clean():
+    d = w002_defective()
+    d["provided"] = {"obs"}
+    return d
+
+
+# W010: two blind writers of one URI with no dataflow path between them.
+def w010_defective():
+    wf = _wf("ww")
+    wf.var("x")
+    wf.step("w1", _fn, inputs=("x",), outputs=("r",))
+    wf.step("w2", _fn, inputs=("x",), outputs=("r",))
+    return {"wf": wf, "provided": {"x"}}
+
+
+def w010_clean():
+    wf = _wf("ww-clean")
+    wf.var("x")
+    wf.step("w1", _fn, inputs=("x",), outputs=("r",))
+    wf.step("w2", _fn, inputs=("x", "r"), outputs=("r",))   # accumulates
+    return {"wf": wf, "provided": {"x"}}
+
+
+# W011: a reader whose input is blindly overwritten by a step ordered
+# after it only by the scheduler's anti-dependency fence.
+def w011_defective():
+    wf = _wf("rw")
+    wf.var("x")
+    wf.step("produce", _fn, inputs=("x",), outputs=("v",))
+    wf.step("consume", _fn, inputs=("v",), outputs=("out",))
+    wf.step("refresh", _fn, inputs=("x",), outputs=("v",))
+    return {"wf": wf, "provided": {"x"}}
+
+
+def w011_clean():
+    wf = _wf("rw-clean")
+    wf.var("x")
+    wf.step("produce", _fn, inputs=("x",), outputs=("v",))
+    wf.step("consume", _fn, inputs=("v",), outputs=("out",))
+    wf.step("refresh", _fn, inputs=("out",), outputs=("v2",))
+    return {"wf": wf, "provided": {"x"}}
+
+
+# W012: a version overwritten before anything reads it.
+def w012_defective():
+    wf = _wf("deadwrite")
+    wf.var("x")
+    wf.step("w1", _fn, inputs=("x",), outputs=("v",))
+    wf.step("w2", _fn, inputs=("x",), outputs=("v",))
+    wf.step("read", _fn, inputs=("v",), outputs=("out",))
+    return {"wf": wf, "provided": {"x"}}
+
+
+def w012_clean():
+    wf = _wf("deadwrite-clean")
+    wf.var("x")
+    wf.step("w1", _fn, inputs=("x",), outputs=("v",))
+    wf.step("read1", _fn, inputs=("v",), outputs=("o1",))
+    wf.step("w2", _fn, inputs=("x", "v"), outputs=("v",))
+    wf.step("read2", _fn, inputs=("v",), outputs=("o2",))
+    return {"wf": wf, "provided": {"x"}}
+
+
+# W050: a step none of whose outputs reach a final version or a reader.
+def w050_defective():
+    wf = _wf("deadstep")
+    wf.var("x")
+    wf.step("dead", _fn, inputs=("x",), outputs=("v",))
+    wf.step("alive", _fn, inputs=("x",), outputs=("v",))
+    wf.step("read", _fn, inputs=("v",), outputs=("out",))
+    return {"wf": wf, "provided": {"x"}}
+
+
+def w050_clean():
+    wf = _wf("deadstep-clean")
+    wf.var("x")
+    wf.step("a", _fn, inputs=("x",), outputs=("v",))
+    wf.step("read", _fn, inputs=("v",), outputs=("out",))
+    return {"wf": wf, "provided": {"x"}}
+
+
+CASES = {
+    "W001": ("verify", w001_defective, w001_clean),
+    "W002": ("verify", w002_defective, w002_clean),
+    "W010": ("verify", w010_defective, w010_clean),
+    "W011": ("verify", w011_defective, w011_clean),
+    "W012": ("verify", w012_defective, w012_clean),
+    "W050": ("verify", w050_defective, w050_clean),
+}

@@ -1,0 +1,85 @@
+"""Memoization-safety and residency-budget defects."""
+from repro.core.tiers import default_tiers
+from repro.core.workflow import Workflow
+
+
+def pure(x):
+    return {"y": x}
+
+
+# W030: memoizable=True but the fn closes over mutable state the memo
+# key (code fingerprint + input digests + outputs) cannot see.
+def w030_defective():
+    state = {"calls": 0}
+
+    def fn(x):
+        state["calls"] += 1
+        return {"y": (x, state["calls"])}
+    wf = Workflow("memodirty")
+    wf.var("x")
+    wf.step("s", fn, inputs=("x",), outputs=("y",), memoizable=True)
+    return {"wf": wf, "provided": {"x"}}
+
+
+def w030_clean():
+    wf = Workflow("memodirty-clean")
+    wf.var("x")
+    wf.step("s", pure, inputs=("x",), outputs=("y",), memoizable=True)
+    return {"wf": wf, "provided": {"x"}}
+
+
+# W031: memoizable=True with no outputs — no execution is ever keyed.
+def w031_defective():
+    wf = Workflow("memovoid")
+    wf.var("x")
+    wf.step("s", lambda x: {}, inputs=("x",), outputs=(),
+            memoizable=True)
+    return {"wf": wf, "provided": {"x"}}
+
+
+def w031_clean():
+    wf = Workflow("memovoid-clean")
+    wf.var("x")
+    wf.step("s", pure, inputs=("x",), outputs=("y",), memoizable=True)
+    return {"wf": wf, "provided": {"x"}}
+
+
+# W040: a residency budget smaller than the bytes the workflow declares
+# it will materialise.
+def _budget_wf():
+    wf = Workflow("budget")
+    wf.var("x")
+    wf.step("s", pure, inputs=("x",), outputs=("y",),
+            bytes_hint=64 * 1024 * 1024)
+    return wf
+
+
+def w040_defective():
+    return {"wf": _budget_wf(), "provided": {"x"},
+            "residency_budget": {"cloud": 1024},
+            "tiers": default_tiers()}
+
+
+def w040_clean():
+    return {"wf": _budget_wf(), "provided": {"x"},
+            "residency_budget": {"cloud": 256 * 1024 * 1024},
+            "tiers": default_tiers()}
+
+
+# W041: a budget on a tier the runtime does not have.
+def w041_defective():
+    return {"wf": _budget_wf(), "provided": {"x"},
+            "residency_budget": {"nebula": 256 * 1024 * 1024},
+            "tiers": default_tiers()}
+
+
+def w041_clean():
+    return w040_clean()
+
+
+CASES = {
+    "W030": ("verify", w030_defective, w030_clean),
+    "W031": ("verify", w031_defective, w031_clean),
+    "W040": ("verify", w040_defective, w040_clean),
+    "W041": ("verify", w041_defective, w041_clean),
+}

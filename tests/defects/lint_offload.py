@@ -1,0 +1,112 @@
+"""Offloadability defects: missing impls, signature drift, unshippable
+closures, captured device arrays."""
+import jax.numpy as jnp
+
+from repro.core.workflow import Workflow
+
+
+def _fn(**kw):
+    return {}
+
+
+# module-level and thus picklable — the shippable twin of a nested fn
+def shippable(x):
+    return {"y": x}
+
+
+# W003: neither fn nor remote_impl.
+def w003_defective():
+    wf = Workflow("noimpl")
+    wf.var("x")
+    wf.step("ghost", None, inputs=("x",), outputs=("y",))
+    return {"wf": wf, "provided": {"x"}}
+
+
+def w003_clean():
+    wf = Workflow("noimpl-clean")
+    wf.var("x")
+    wf.step("ghost", None, inputs=("x",), outputs=("y",),
+            remote_impl="registered_step")
+    return {"wf": wf, "provided": {"x"},
+            "registry": {"registered_step": object()}}
+
+
+# W004: remote_impl not in the fabric step registry.
+def w004_defective():
+    wf = Workflow("unknownimpl")
+    wf.var("x")
+    wf.step("s", None, inputs=("x",), outputs=("y",),
+            remote_impl="nope_not_registered", remotable=True)
+    return {"wf": wf, "provided": {"x"}, "registry": {}}
+
+
+def w004_clean():
+    d = w004_defective()
+    d["registry"] = {"nope_not_registered": object()}
+    return d
+
+
+# W005: declared inputs the fn cannot accept / params it cannot bind.
+def w005_defective():
+    wf = Workflow("sig")
+    wf.var("a")
+    wf.step("s", lambda a, b: {"y": a}, inputs=("a",), outputs=("y",))
+    return {"wf": wf, "provided": {"a"}}
+
+
+def w005_clean():
+    wf = Workflow("sig-clean")
+    wf.var("a").var("b")
+    wf.step("s", lambda a, b: {"y": a}, inputs=("a", "b"), outputs=("y",))
+    return {"wf": wf, "provided": {"a", "b"}}
+
+
+# W020: a remotable non-jax step whose fn cannot pickle (nested closure).
+def w020_defective():
+    def nested(x):
+        return {"y": x}
+    wf = Workflow("unship")
+    wf.var("x")
+    wf.step("s", nested, inputs=("x",), outputs=("y",),
+            remotable=True, jax_step=False)
+    return {"wf": wf, "provided": {"x"}}
+
+
+def w020_clean():
+    wf = Workflow("unship-clean")
+    wf.var("x")
+    wf.step("s", shippable, inputs=("x",), outputs=("y",),
+            remotable=True, jax_step=False)
+    return {"wf": wf, "provided": {"x"}}
+
+
+# W021: a remotable step closing over a device array.
+def w021_defective():
+    scale = jnp.ones((4,))
+
+    def fn(x):
+        return {"y": x * scale}
+    wf = Workflow("devcap")
+    wf.var("x")
+    wf.step("s", fn, inputs=("x",), outputs=("y",), remotable=True)
+    return {"wf": wf, "provided": {"x"}}
+
+
+def w021_clean():
+    scale = 2.0
+
+    def fn(x):
+        return {"y": x * scale}
+    wf = Workflow("devcap-clean")
+    wf.var("x")
+    wf.step("s", fn, inputs=("x",), outputs=("y",), remotable=True)
+    return {"wf": wf, "provided": {"x"}}
+
+
+CASES = {
+    "W003": ("verify", w003_defective, w003_clean),
+    "W004": ("verify", w004_defective, w004_clean),
+    "W005": ("verify", w005_defective, w005_clean),
+    "W020": ("verify", w020_defective, w020_clean),
+    "W021": ("verify", w021_defective, w021_clean),
+}

@@ -1,0 +1,236 @@
+"""Static workflow verifier + happens-before hazard sanitizer.
+
+Covers the analysis subsystem's acceptance surface:
+
+  * the seeded defect corpus (tests/defects/): every lint rule and every
+    hazard class has a minimal defective artifact that fires exactly its
+    rule id, and a clean twin that stays silent,
+  * submit(validate=...) admission semantics — "error" rejects with
+    WorkflowRejected (naming the rule ids), "warn" admits and attaches
+    handle.findings, "off" skips analysis entirely,
+  * kinded dependency edges (RAW/WAR/WW) and their equivalence with the
+    legacy call shape,
+  * construction-time duplicate step-name / duplicate-output errors that
+    name both definition sites,
+  * a real fabric-backed run whose event + replica logs replay clean
+    through the sanitizer.
+"""
+import numpy as np
+import pytest
+
+from defects import CASES
+from repro.analysis import (ERROR, RULES, WorkflowRejected, sanitizer,
+                            verify)
+from repro.core import (CostModel, EmeraldRuntime, MDSS, MigrationManager,
+                        Workflow, default_tiers)
+from repro.core.workflow import WorkflowError
+
+
+def emerald():
+    tiers = default_tiers()
+    cm = CostModel(tiers)
+    mdss = MDSS(tiers, cost_model=cm)
+    return MigrationManager(tiers, mdss, cm)
+
+
+def run_case(kind, kwargs):
+    kwargs = dict(kwargs)
+    if kind == "verify":
+        return verify(kwargs.pop("wf"), **kwargs)
+    if kind == "events":
+        return sanitizer.check(kwargs["events"],
+                               completed_run=kwargs.get("completed_run", True))
+    if kind == "store":
+        return sanitizer.check_store(kwargs["installs"], kwargs["evictions"])
+    raise AssertionError(f"unknown case kind {kind}")
+
+
+# ------------------------------------------------------------------ corpus
+@pytest.mark.parametrize("rule", sorted(CASES))
+def test_defect_corpus_fires_exact_rule(rule):
+    kind, make_defective, make_clean = CASES[rule]
+    fired = {f.rule for f in run_case(kind, make_defective())}
+    assert rule in fired, f"{rule} did not fire on its defective artifact"
+    clean = {f.rule for f in run_case(kind, make_clean())}
+    assert rule not in clean, f"{rule} fired on its clean twin: {clean}"
+
+
+def test_corpus_covers_every_registered_rule():
+    # L-rules are exercised by the drift canary in test_obs; everything
+    # else must have a seeded defect here.
+    expected = {r for r in RULES if not r.startswith("L")}
+    assert set(CASES) == expected
+
+
+def test_findings_carry_metadata():
+    kind, make_defective, _ = CASES["W001"]
+    (f,) = [x for x in run_case(kind, make_defective()) if x.rule == "W001"]
+    assert f.severity == ERROR
+    assert f.steps and f.hint
+    assert "W001" in str(f) and "->" in f.message  # witness path
+
+
+# ------------------------------------------------- submit(validate=...)
+def _racy_wf():
+    """Two blind writers of one URI — a W010 warning, no errors."""
+    wf = Workflow("racy")
+    wf.var("x")
+    wf.step("w1", lambda x: {"r": x}, inputs=("x",), outputs=("r",),
+            jax_step=False)
+    wf.step("w2", lambda x: {"r": x + 1}, inputs=("x",), outputs=("r",),
+            jax_step=False)
+    wf.step("read", lambda r: {"out": r}, inputs=("r",), outputs=("out",),
+            jax_step=False)
+    return wf
+
+
+def _broken_wf():
+    wf = Workflow("broken")
+    wf.var("obs")
+    wf.step("fit", lambda obs: {"chi": obs}, inputs=("obs",),
+            outputs=("chi",), jax_step=False)
+    return wf  # submitted with no init_vars -> W002 unbound-input
+
+
+def test_submit_validate_error_rejects_and_names_rules():
+    rt = EmeraldRuntime(emerald(), max_workers=2, telemetry=False)
+    try:
+        with pytest.raises(WorkflowRejected) as ei:
+            rt.submit(_broken_wf(), {})
+        assert "W002" in str(ei.value)
+        assert any(f.rule == "W002" for f in ei.value.findings)
+        # the rejected run must not leak into the scheduler
+        h = rt.submit(_broken_wf(), {"obs": np.float64(1.0)})
+        assert float(h.result()["chi"]) == 1.0
+    finally:
+        rt.close()
+
+
+def test_submit_validate_warn_admits_and_attaches_findings():
+    rt = EmeraldRuntime(emerald(), max_workers=2, telemetry=False)
+    try:
+        with pytest.warns(UserWarning, match="W002"):
+            h = rt.submit(_broken_wf(), {}, validate="warn")
+        assert any(f.rule == "W002" for f in h.findings)
+        with pytest.raises(Exception):
+            h.result()  # it was genuinely broken — the lint was right
+    finally:
+        rt.close()
+
+
+def test_submit_validate_off_skips_analysis():
+    rt = EmeraldRuntime(emerald(), max_workers=2, telemetry=False)
+    try:
+        h = rt.submit(_broken_wf(), {}, validate="off")
+        assert h.findings == []
+        with pytest.raises(Exception):
+            h.result()
+    finally:
+        rt.close()
+
+
+def test_submit_warnings_do_not_block():
+    rt = EmeraldRuntime(emerald(), max_workers=2, telemetry=False)
+    try:
+        h = rt.submit(_racy_wf(), {"x": np.float64(1.0)})
+        assert h.result()["out"] is not None
+        assert any(f.rule == "W010" for f in h.findings)
+    finally:
+        rt.close()
+
+
+def test_submit_validate_rejects_unknown_mode():
+    rt = EmeraldRuntime(emerald(), max_workers=2, telemetry=False)
+    try:
+        with pytest.raises(ValueError, match="validate"):
+            rt.submit(_racy_wf(), {"x": np.float64(1.0)}, validate="maybe")
+    finally:
+        rt.close()
+
+
+def test_resident_uris_count_as_provided():
+    """Warm resubmission into a namespace whose inputs are already
+    resident must not trip W002."""
+    rt = EmeraldRuntime(emerald(), max_workers=2, telemetry=False)
+    try:
+        h1 = rt.submit(_broken_wf(), {"obs": np.float64(2.0)},
+                       namespace="warm")
+        assert float(h1.result()["chi"]) == 2.0
+        h2 = rt.submit(_broken_wf(), {}, namespace="warm")
+        assert float(h2.result()["chi"]) == 2.0
+    finally:
+        rt.close()
+
+
+# ------------------------------------------------------- kinded edges
+def test_dependencies_kinds():
+    wf = Workflow("kinds")
+    wf.var("x")
+    wf.step("w1", lambda **kw: {}, inputs=("x",), outputs=("v",))
+    wf.step("read", lambda **kw: {}, inputs=("v",), outputs=("out",))
+    wf.step("w2", lambda **kw: {}, inputs=("x",), outputs=("v",))
+    kd = wf.dependencies(kinds=True)
+    assert kd["read"]["w1"] == frozenset({"RAW"})
+    assert "WW" in kd["w2"]["w1"]
+    assert "WAR" in kd["w2"]["read"]
+    # legacy shape is the kinded graph with kinds erased
+    plain = wf.dependencies()
+    assert plain == {n: set(e) for n, e in kd.items()}
+
+
+def test_duplicate_step_name_names_both_sites():
+    wf = Workflow("dup")
+    wf.step("s", lambda **kw: {}, outputs=("a",))
+    with pytest.raises(WorkflowError) as ei:
+        wf.step("s", lambda **kw: {}, outputs=("b",))
+    msg = str(ei.value)
+    assert "redefined at" in msg and "first defined at" in msg
+    assert msg.count("test_analysis.py") == 2
+
+
+def test_duplicate_variable_names_both_sites():
+    wf = Workflow("dupvar")
+    wf.var("x")
+    with pytest.raises(WorkflowError, match="first declared at"):
+        wf.var("x")
+
+
+def test_duplicate_output_uri_rejected():
+    wf = Workflow("dupout")
+    with pytest.raises(WorkflowError, match="more than once"):
+        wf.step("s", lambda **kw: {}, outputs=("a", "a"))
+
+
+# ------------------------------------------------------ real-run replay
+def test_real_run_replays_clean_through_sanitizer():
+    rt = EmeraldRuntime(emerald(), max_workers=4, telemetry=False)
+    try:
+        wf = Workflow("clean-run")
+        wf.var("x")
+        wf.step("a", lambda x: {"u": x * 2}, inputs=("x",), outputs=("u",),
+                remotable=True, jax_step=False)
+        wf.step("b", lambda x: {"v": x + 1}, inputs=("x",), outputs=("v",),
+                remotable=True, jax_step=False)
+        wf.step("c", lambda u, v: {"out": u + v}, inputs=("u", "v"),
+                outputs=("out",), jax_step=False)
+        h = rt.submit(wf, {"x": np.float64(3.0)})
+        assert float(h.result()["out"]) == 10.0
+        assert sanitizer.check(h.events, completed_run=True) == []
+        assert sanitizer.check_store(rt.mdss) == []
+        assert sanitizer.check_runtime(rt, [h]) == []
+    finally:
+        rt.close()
+
+
+def test_dispatch_events_emitted_per_step():
+    rt = EmeraldRuntime(emerald(), max_workers=2, telemetry=False)
+    try:
+        h = rt.submit(_racy_wf(), {"x": np.float64(1.0)})
+        h.result()
+        dispatched = [e.step for e in h.events if e.kind == "dispatch"]
+        assert sorted(dispatched) == ["read", "w1", "w2"]
+        lanes = {e.info.get("lane") for e in h.events
+                 if e.kind == "dispatch"}
+        assert lanes <= {"local", "offload"}
+    finally:
+        rt.close()

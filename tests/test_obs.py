@@ -314,23 +314,20 @@ def test_chrome_trace_sanitises_non_json_attrs():
 
 
 # ----------------------------------------------------------- event schema
-def test_every_emit_call_site_is_registered():
-    """Lint: grep src/ for emit("kind" call sites; every kind must have a
-    row in EVENT_SCHEMA (satellite c — no silent schema drift)."""
-    pat = re.compile(r"""\bemit\(\s*["']([a-z_]+)["']""")
-    found = {}
-    for dirpath, _, files in os.walk(SRC_DIR):
-        for fn in files:
-            if not fn.endswith(".py"):
-                continue
-            path = os.path.join(dirpath, fn)
-            with open(path) as f:
-                for kind in pat.findall(f.read()):
-                    found.setdefault(kind, path)
-    assert found, "no emit( call sites found under src/ — lint is broken"
-    unregistered = {k: v for k, v in found.items() if k not in EVENT_SCHEMA}
-    assert not unregistered, \
-        f"emit kinds missing from EVENT_SCHEMA: {unregistered}"
+def test_every_emit_call_site_is_registered(tmp_path):
+    """Wrapper over the promoted self-lint rules (repro.analysis.selfcheck,
+    also reachable as ``emlint --self``): every emit( kind and dotted
+    metric name in src/ must be registered in its schema/catalogue."""
+    from repro.analysis import selfcheck
+    findings = selfcheck.check_source(SRC_DIR)
+    assert not findings, "\n".join(str(f) for f in findings)
+    # canary: the lint actually detects drift (else a regex rot would
+    # make the assertion above pass vacuously)
+    bad = tmp_path / "drift.py"
+    bad.write_text('run.emit("bogus_kind", s)\n'
+                   'metrics.inc("bogus.metric")\n')
+    rules = {f.rule for f in selfcheck.check_source(str(tmp_path))}
+    assert rules == {"L001", "L002"}
 
 
 def test_validate_event():

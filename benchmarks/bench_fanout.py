@@ -1,0 +1,166 @@
+"""Data-parallel scatter/gather fan-out over the content-addressed plane.
+
+Two measurements, each against an un-fanned control:
+
+  * **shard scaling** — one row-parallel step over a fixed pool, un-fanned
+    on a single local lane vs expanded to 8 shards on 4 lanes. The work
+    is sleep-per-row (perfectly divisible), so the fan-out's ceiling is
+    the lane count: the smoke gate asserts >= 3x speedup, i.e. >= 0.75
+    parallel efficiency at 4 workers, which catches serialized shards,
+    a barrier-shaped scatter, or gather-side re-staging.
+  * **incremental re-run** — the same fan-out, fabric-backed with chunk
+    dedup and memoization on: submit, mutate ONE of the 8 shard slices,
+    resubmit. Because every shard reads/writes its own content-addressed
+    ``uri#k`` value, the memo key of 7 shards is unchanged — the re-run
+    must re-execute exactly ONE shard and put only that shard's chunks
+    on the wire (the smoke gate asserts a >= 4x wire-bytes reduction vs
+    the cold run).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.cloud import Fabric
+from repro.core import (CostModel, EmeraldRuntime, MDSS, MigrationManager,
+                        Workflow, default_tiers)
+from repro.core.workflow import Fanout
+
+SMOKE = bool(os.environ.get("FANOUT_SMOKE"))
+
+ROWS = 64                                         # scaling-arm pool rows
+WORK_S = 0.8 if SMOKE else 2.4                    # total sleep across rows
+SHARDS = 8
+WORKERS = 4
+POOL_BYTES = (2 << 20) if SMOKE else (8 << 20)    # incremental-arm pool
+
+SUMMARY: Dict[str, dict] = {}                     # picked up by run.py
+
+
+# ------------------------------------------------------------ shard scaling
+def _row_work(P):
+    arr = np.asarray(P)
+    time.sleep(arr.size * (WORK_S / ROWS))        # work proportional to rows
+    return {"out": arr * 2.0}
+
+
+def make_scaling_wf(name: str, shards: int = 0) -> Workflow:
+    """The row-parallel step, un-fanned (``shards=0``) or fanned out."""
+    wf = Workflow(name)
+    wf.var("P")
+    wf.step("big", _row_work, inputs=("P",), outputs=("out",),
+            jax_step=False,
+            fanout=Fanout(shards=shards) if shards else None)
+    return wf
+
+
+def run_scaling() -> Tuple[float, float]:
+    """(un-fanned wall on 1 lane, 8-shard wall on 4 lanes); the sleeps
+    make the ideal ratio exactly the lane count."""
+    P = np.arange(ROWS, dtype=np.float64)
+    with EmeraldRuntime(local_workers=1) as rt:
+        t0 = time.perf_counter()
+        out = rt.submit(make_scaling_wf("base"), {"P": P}).result(120)
+        base = time.perf_counter() - t0
+        np.testing.assert_array_equal(out["out"], P * 2.0)
+    with EmeraldRuntime(local_workers=WORKERS) as rt:
+        t0 = time.perf_counter()
+        h = rt.submit(make_scaling_wf("fan", shards=SHARDS), {"P": P})
+        out = h.result(120)
+        fan = time.perf_counter() - t0
+        np.testing.assert_array_equal(out["out"], P * 2.0)
+        assert sum(1 for e in h.events if e.kind == "shard_done") == SHARDS
+    return base, fan
+
+
+# -------------------------------------------------------- incremental re-run
+def _shard_heavy(P):
+    arr = np.asarray(P)
+    time.sleep(0.02)
+    return {"out": arr * 2.0}
+
+
+def make_memo_wf(name: str) -> Workflow:
+    wf = Workflow(name)
+    wf.var("P")
+    wf.step("big", _shard_heavy, inputs=("P",), outputs=("out",),
+            remotable=True, jax_step=False, fanout=Fanout(shards=SHARDS))
+    return wf
+
+
+def _real_shard_execs(h) -> int:
+    return sum(1 for e in h.events
+               if e.kind in ("local", "offload") and "#" in e.step
+               and not e.info.get("memo_hit"))
+
+
+def run_incremental() -> Tuple[int, int, int, int]:
+    """(cold wire bytes, warm wire bytes, cold shard executions, warm
+    shard executions) for a fabric-backed fan-out submit + resubmit
+    after mutating one element of ONE shard's slice."""
+    tiers = default_tiers()
+    cm = CostModel(tiers)
+    mdss = MDSS(tiers, cost_model=cm, chunk_dedup=True)
+    mgr = MigrationManager(tiers, mdss, cm)
+    P1 = np.random.rand(POOL_BYTES // 8)
+    P2 = P1.copy()
+    # land the mutation mid-slice of shard 3 of np.array_split(P, 8)
+    P2[(len(P2) // SHARDS) * 3 + 1] += 1.0
+    with Fabric(workers=2, dedup=True) as fabric:
+        with EmeraldRuntime(mgr, policy="annotate", max_workers=4,
+                            memoize=True) as rt:
+            rt.attach_fabric(fabric)
+            b = fabric.broker
+
+            def wire() -> int:
+                return b.bytes_sent + b.bytes_received
+
+            h1 = rt.submit(make_memo_wf("cold"), {"P": P1})
+            out1 = h1.result(120)["out"]
+            np.testing.assert_array_equal(out1, P1 * 2.0)
+            cold = wire()
+            h2 = rt.submit(make_memo_wf("warm"), {"P": P2})
+            out2 = h2.result(120)["out"]
+            np.testing.assert_array_equal(out2, P2 * 2.0)
+            warm = wire() - cold
+    return cold, warm, _real_shard_execs(h1), _real_shard_execs(h2)
+
+
+# ---------------------------------------------------------------- driver
+def main() -> List[str]:
+    base, fan = run_scaling()
+    speedup = base / fan
+    eff = speedup / WORKERS
+    cold, warm, execs1, execs2 = run_incremental()
+    reduction = cold / max(warm, 1)
+    SUMMARY.update({
+        "scaling": {"unfanned_s": round(base, 4), "fanned_s": round(fan, 4),
+                    "shards": SHARDS, "workers": WORKERS,
+                    "speedup_x": round(speedup, 2),
+                    "parallel_efficiency": round(eff, 3)},
+        "incremental": {"cold_wire_bytes": cold, "warm_wire_bytes": warm,
+                        "reduction_x": round(reduction, 1),
+                        "cold_shard_execs": execs1,
+                        "warm_shard_execs": execs2},
+    })
+    return [
+        row("fanout_unfanned_1worker", base, f"rows={ROWS}"),
+        row("fanout_8shard_4worker", fan,
+            f"speedup={speedup:.2f}x efficiency={eff:.2f}"),
+        row("fanout_incremental_cold", 0.0,
+            f"wire_mb={cold / 2**20:.1f} shard_execs={execs1}"),
+        row("fanout_incremental_warm", 0.0,
+            f"wire_kb={warm / 2**10:.1f} reduction={reduction:.0f}x "
+            f"shard_execs={execs2}"),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))
+
+EMLINT_WORKFLOWS = [lambda: make_scaling_wf("lint", shards=SHARDS),
+                    lambda: make_memo_wf("lint")]   # emlint targets

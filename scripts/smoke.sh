@@ -27,7 +27,7 @@ python scripts/emlint.py --strict \
     benchmarks.bench_dag benchmarks.bench_runtime benchmarks.bench_locality \
     benchmarks.bench_dataplane benchmarks.bench_parallel_offload \
     benchmarks.bench_partitioner benchmarks.bench_mdss \
-    benchmarks.bench_analysis
+    benchmarks.bench_analysis benchmarks.bench_fanout
 
 echo "== analysis bench (1k-step verify under its 100 ms budget) =="
 timeout 120 python -m benchmarks.bench_analysis
@@ -159,6 +159,39 @@ assert stream <= mono * 1.10 + 0.01, (
 assert real == 1 and hits == 1, (
     f"memoization regression: {real} real executions, {hits} hits")
 print(f"# dataplane smoke ok in {time.time() - t0:.1f}s")
+EOF
+
+echo "== fanout smoke (8-shard scaling + per-shard memo re-run) =="
+FANOUT_SMOKE=1 timeout 300 python - <<'EOF'
+import time
+from benchmarks import bench_fanout
+
+t0 = time.time()
+base, fan = bench_fanout.run_scaling()
+speedup = base / fan
+eff = speedup / bench_fanout.WORKERS
+cold, warm, execs1, execs2 = bench_fanout.run_incremental()
+print(f"bench_fanout: unfanned={base * 1e3:.0f}ms fanned={fan * 1e3:.0f}ms "
+      f"speedup={speedup:.2f}x efficiency={eff:.2f} | incremental "
+      f"{cold / 2**20:.1f}MB -> {warm / 2**10:.1f}KB "
+      f"shard_execs {execs1}->{execs2}")
+# scaling gate: the 8-shard fan-out on 4 local lanes must beat the
+# un-fanned single-lane run by >= 3x (>= 0.75 parallel efficiency;
+# expected ~3.9x on the sleep-per-row workload). Catches serialized
+# shards, a barrier-shaped scatter, or gather-side re-staging.
+assert speedup >= 3.0, (
+    f"fan-out scaling regression: {speedup:.2f}x < 3x "
+    f"(unfanned {base:.3f}s, fanned {fan:.3f}s)")
+# incremental gate: after mutating 1 of 8 shard slices the re-run must
+# re-execute exactly ONE shard and ship only that shard's chunks
+# (expected ~10x fewer wire bytes; 4x catches whole-pool re-staging)
+assert execs1 == 8 and execs2 == 1, (
+    f"per-shard memo regression: {execs2} shards re-executed after a "
+    f"single-shard mutation (cold run: {execs1})")
+assert warm * 4 <= cold, (
+    f"incremental wire regression: warm re-run moved {warm} bytes vs "
+    f"cold {cold}")
+print(f"# fanout smoke ok in {time.time() - t0:.1f}s")
 EOF
 
 echo "== dag smoke (event-driven executor vs critical-path bound) =="

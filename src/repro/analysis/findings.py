@@ -129,6 +129,21 @@ W050 = _rule("W050", INFO, "dead-step",
              "no final output is reachable from this step's outputs — "
              "it burns a lane slot for nothing; drop it or consume its "
              "outputs")
+W060 = _rule("W060", ERROR, "fanout-spec",
+             "fix the Fanout annotation: shards must be >= 1 and every "
+             "scatter= name must be one of the step's declared inputs "
+             "(a step with no inputs has nothing to scatter)")
+W061 = _rule("W061", WARNING, "fanout-unpicklable-fn",
+             "partition_fn/combine_fn is a closure or lambda the fabric "
+             "and checkpoints cannot carry; use a module-level function")
+W062 = _rule("W062", ERROR, "fanout-gather-missing-shard",
+             "the gather step must read every sibling shard's output "
+             "URI (out#0..out#N-1) — a dropped shard would silently "
+             "vanish from the combined result")
+W063 = _rule("W063", ERROR, "fanout-sibling-ww",
+             "sibling shards of one fan-out must write disjoint shard "
+             "URIs; two shards writing the same uri#k race on the final "
+             "version")
 
 # ---------------------------------------------------------------- sanitizer
 H101 = _rule("H101", ERROR, "duplicate-done",

@@ -316,6 +316,9 @@ def verify(wf: Workflow, *, provided: Optional[Iterable[str]] = None,
                 "will materialise (sum of bytes_hint over writing "
                 "steps)", uri=tier_name))
 
+    # ------------------------------------------ W060..W063 fan-out
+    out.extend(_fanout_findings(wf, top))
+
     # ----------------------------------------------- W050 dead-step
     live: Set[str] = {s.name for s in top if not s.outputs}
     live |= {ws[-1] for ws in writers.values()}
@@ -331,6 +334,81 @@ def verify(wf: Workflow, *, provided: Optional[Iterable[str]] = None,
                 f"step {s.name} is dead: every output is overwritten "
                 "before being read and nothing downstream consumes it",
                 steps=(s.name,), where=s.defined_at))
+    return out
+
+
+def _unpicklable_reason(fn) -> str:
+    """Why ``fn`` cannot ride a pickle (fabric ship / checkpoint), or ''."""
+    import pickle
+    if getattr(fn, "__name__", "") == "<lambda>":
+        return "is a lambda — unpicklable"
+    try:
+        pickle.dumps(fn)
+    except Exception as e:
+        return f"is unpicklable ({type(e).__name__}: {e})"
+    return ""
+
+
+def _fanout_findings(wf: Workflow, top: List[Step]) -> List[Finding]:
+    """W060–W063: fan-out legality.
+
+    Runs over both forms the verifier can see: the *unexpanded* step
+    (static lint, or a spec so broken the partitioner refused to expand
+    it — W060/W061) and the *expanded* scatter/shard/gather triple the
+    runtime admits (W061 on the closure carriers, W062/W063 on the
+    shard-URI wiring of hand-built or mutated expansions).
+    """
+    from repro.core.mdss import shard_uri
+    from repro.core.partitioner import _fanout_spec_errors
+    out: List[Finding] = []
+    shard_writers: Dict[str, Dict[str, str]] = {}   # parent -> uri -> shard
+    for s in top:
+        spec = s.fanout
+        if spec is not None and not s.fanout_role:
+            for err in _fanout_spec_errors(s):
+                out.append(finding(
+                    F.W060,
+                    f"step {s.name}'s fan-out spec {err}",
+                    steps=(s.name,), where=s.defined_at))
+        if spec is not None:
+            carried = []
+            if s.fanout_role in ("", "scatter") and spec.partition_fn:
+                carried.append(("partition_fn", spec.partition_fn))
+            if s.fanout_role in ("", "gather") and spec.combine_fn:
+                carried.append(("combine_fn", spec.combine_fn))
+            for label, fn in carried:
+                reason = _unpicklable_reason(fn)
+                if reason:
+                    out.append(finding(
+                        F.W061,
+                        f"step {s.name}'s {label} {reason}; fabric "
+                        "workers and checkpoints cannot carry it",
+                        steps=(s.name,), where=s.defined_at))
+        if s.fanout_role == "gather" and s.fanout_shards > 0:
+            expected = {shard_uri(o, k)
+                        for o in s.outputs for k in range(s.fanout_shards)}
+            dropped = sorted(expected - set(s.inputs))
+            if dropped:
+                out.append(finding(
+                    F.W062,
+                    f"gather step {s.name} never reads sibling shard "
+                    f"output(s) {', '.join(dropped)} — those shards' "
+                    "results silently vanish from the combined value",
+                    steps=(s.name,), uri=dropped[0], where=s.defined_at))
+        if s.fanout_role == "shard":
+            seen = shard_writers.setdefault(s.fanout_parent, {})
+            for o in s.outputs:
+                if o in seen and seen[o] != s.name:
+                    out.append(finding(
+                        F.W063,
+                        f"sibling shards {seen[o]} and {s.name} of "
+                        f"fan-out {s.fanout_parent} both write {o} — "
+                        "the surviving version depends on completion "
+                        "order",
+                        steps=(seen[o], s.name), uri=o,
+                        where=s.defined_at))
+                else:
+                    seen[o] = s.name
     return out
 
 
@@ -356,8 +434,12 @@ def _signature_findings(s: Step) -> List[Finding]:
     pos_only = [p.name for p in params
                 if p.kind == p.POSITIONAL_ONLY and p.default is p.empty]
     out = []
-    extra = sorted(set(s.inputs) - named)
-    missing = sorted(required - set(s.inputs))
+    # staging calls fn(**{arg_names[i]: value_of(inputs[i])}) — the
+    # declared parameter names are arg_names when set (fan-out shard
+    # steps read uri#k but call the original fn by its own names)
+    declared = set(s.arg_names) if s.arg_names else set(s.inputs)
+    extra = sorted(declared - named)
+    missing = sorted(required - declared)
     if extra:
         out.append(finding(
             F.W005,

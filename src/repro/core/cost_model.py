@@ -89,6 +89,20 @@ class CostModel:
         flops = st.flops or step.flops_hint
         byts = st.bytes_accessed or step.bytes_hint
         if not flops and not byts:
+            # unmeasured fan-out shard: 1/N of whatever the un-expanded
+            # parent step has measured or estimated (a prior non-fanned
+            # run, or per-shard stats of a different width) — keeps cpl
+            # priorities and fair-share charges meaningful on the first
+            # sharded run
+            if getattr(step, "fanout_role", "") == "shard" \
+                    and step.fanout_parent and step.fanout_shards > 0:
+                pst = self.stats.get(step.fanout_parent)
+                if pst is not None:
+                    parent_est = pst.measured_s.get(tier_name) or max(
+                        pst.flops / tier.peak_flops,
+                        pst.bytes_accessed / tier.hbm_bw)
+                    if parent_est > 0:
+                        return parent_est / step.fanout_shards
             return 0.0  # unknown -> neutral
         return max(flops / tier.peak_flops, byts / tier.hbm_bw)
 

@@ -27,6 +27,12 @@ the snapshot-cache invariants (and tests that instrument
 
 ``Event`` and ``WorkflowFailure`` are defined in ``repro.core.runtime``
 and re-exported here for compatibility.
+
+Fan-out steps work through the shim unchanged: the ``PartitionedWorkflow``
+handed to the constructor was built by :func:`repro.core.partitioner.
+partition`, which expands every ``Fanout``-annotated step into
+scatter/shard/gather before this module ever sees it — the executor
+dispatches the shards as ordinary independent ready steps.
 """
 from __future__ import annotations
 

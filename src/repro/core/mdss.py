@@ -83,6 +83,24 @@ def namespace_of(uri: str) -> str:
     return uri.split("/", 1)[0] if "/" in uri else ""
 
 
+def shard_uri(uri: str, k: int) -> str:
+    """URI of shard ``k`` of a fanned-out value.
+
+    A shard is an ordinary store entry — its own versions, manifest,
+    chunk-index rows, and ``content_digest`` — so the locality scorer,
+    wire dedup, and step memoization treat every shard independently:
+    mutating one shard's rows re-digests (and re-ships, re-executes)
+    only that shard. ``#`` never appears in namespace separators, so a
+    namespaced view resolves ``ns/uri#k`` like any other leaf.
+    """
+    return f"{uri}#{k}"
+
+
+def shard_uris(uri: str, n: int) -> List[str]:
+    """All ``n`` shard URIs of ``uri``, in shard order."""
+    return [shard_uri(uri, k) for k in range(n)]
+
+
 def nbytes_of(value) -> int:
     total = 0
     for leaf in jax.tree.leaves(value):

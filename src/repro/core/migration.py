@@ -454,7 +454,12 @@ class MigrationManager:
             if len(step.outputs) != 1:
                 raise StepFailure(
                     f"step {step.name} returned non-dict for multiple outputs")
-            out = {step.outputs[0]: out}
+            out = {(step.out_names or step.outputs)[0]: out}
+        if step.out_names:
+            # shard steps: the fn returns its original output names;
+            # publish them under this shard's uri#k outputs
+            out = {u: out[n] for u, n in zip(step.outputs, step.out_names)
+                   if n in out}
         missing = set(step.outputs) - set(out)
         if missing:
             raise StepFailure(f"step {step.name} missing outputs {missing}")
@@ -493,9 +498,15 @@ class MigrationManager:
         errors go through the executor's retry path like execution
         errors."""
         from concurrent.futures import TimeoutError as _FutTimeout
+        names = step.arg_names or tuple(uris)
+        if len(names) != len(uris):
+            raise StepFailure(
+                f"step {step.name}: arg_names has {len(names)} entries for "
+                f"{len(uris)} inputs — they must be parallel")
         try:
             bytes_in = mdss.ensure(uris, tier_name)
-            return bytes_in, {u: mdss.get(u, tier_name) for u in uris}
+            return bytes_in, {n: mdss.get(u, tier_name)
+                              for n, u in zip(names, uris)}
         except StepFailure:
             raise
         except (RuntimeError, LookupError, _FutTimeout, TimeoutError) as e:

@@ -96,7 +96,8 @@ from repro.obs.tracing import Tracer, wall_now
 class Event:
     kind: str          # dispatch | suspend | offload | resume | local |
                        # retry | speculate | prefetch | checkpoint |
-                       # place | step_done — schema in repro.obs.events
+                       # place | step_done | scatter | shard_done |
+                       # gather — schema in repro.obs.events
     step: str
     tier: str = ""
     t: float = 0.0      # perf_counter: monotonic, for intra-process deltas
@@ -325,6 +326,12 @@ class _Run:
     epoch_wall: float = field(default_factory=time.time)
     epoch_perf: float = field(default_factory=time.perf_counter)
     root_ctx: Any = None            # (trace_id, span_id) of the run span
+    # per fan-out parent: the "fanout" span identity allocated when the
+    # scatter step dispatches, so every shard/gather dispatch span nests
+    # under one umbrella in the trace; recorded (and popped) when the
+    # gather completes. fanout_t0 holds the matching wall start.
+    fanout_ctx: Dict[str, Any] = field(default_factory=dict)
+    fanout_t0: Dict[str, float] = field(default_factory=dict)
 
     def emit(self, kind, step, tier="", **info):
         t = time.perf_counter()
@@ -999,6 +1006,16 @@ class EmeraldRuntime:
                              reason=decision.reason, scores=decision.scores,
                              stale_bytes=decision.stale_bytes)
                 self._prefetch_successors(run, s)
+                if s.fanout_role == "scatter":
+                    # umbrella span for the whole fan-out: allocated now
+                    # so shard/gather dispatch spans can parent to it,
+                    # recorded when the gather completes (_complete)
+                    run.fanout_t0[s.fanout_parent] = wall_now()
+                    if run.root_ctx is not None:
+                        run.fanout_ctx[s.fanout_parent] = (
+                            run.run_id, self.tracer.next_id())
+                elif s.fanout_role == "shard":
+                    self.metrics.inc("fanout.shards_dispatched")
                 run.emit("dispatch", s.name, run.placed.get(name, ""),
                          lane="offload" if lane else "local")
                 if lane:
@@ -1050,6 +1067,28 @@ class EmeraldRuntime:
         run.completed.add(name)
         run.emit("step_done", name, offloaded=offloaded)
         self.metrics.inc("runtime.steps_completed")
+        st = run.steps[name]
+        if st.fanout_role == "scatter":
+            run.emit("scatter", name, shards=st.fanout_shards,
+                     parent=st.fanout_parent, uris=list(st.outputs))
+            self.metrics.inc("fanout.scatters")
+        elif st.fanout_role == "shard":
+            run.emit("shard_done", name, shard=st.shard_index,
+                     parent=st.fanout_parent)
+            self.metrics.inc("fanout.shards_completed")
+        elif st.fanout_role == "gather":
+            run.emit("gather", name, shards=st.fanout_shards,
+                     parent=st.fanout_parent)
+            self.metrics.inc("fanout.gathers")
+            ctx = run.fanout_ctx.pop(st.fanout_parent, None)
+            t0 = run.fanout_t0.pop(st.fanout_parent, None)
+            if ctx is not None and t0 is not None:
+                # the umbrella span every shard dispatch parented to
+                self.tracer.add_span(
+                    run.run_id, f"fanout:{st.fanout_parent}", t0,
+                    wall_now() - t0, span_id=ctx[1],
+                    parent_id=run.root_ctx[1], cat="sched", track="driver",
+                    shards=st.fanout_shards)
         if run.root_ctx is not None:
             self.tracer.add_span(run.run_id, "complete", wall_now(), 0.0,
                                  parent_id=run.root_ctx[1], cat="sched",
@@ -1164,10 +1203,15 @@ class EmeraldRuntime:
             # the dispatch span: everything below — staging, ship, remote
             # exec, install — nests under it via the lane thread's TLS,
             # and its ctx rides the wire so worker-side phases do too
+            parent_ctx = run.root_ctx
+            if s.fanout_role:
+                # shard/gather (and scatter) spans nest under the fan-out
+                # umbrella span allocated at scatter dispatch
+                parent_ctx = run.fanout_ctx.get(s.fanout_parent, run.root_ctx)
             with self.tracer.span(
                     "dispatch", cat="sched",
                     track=f"lane:{'offload' if offloaded else 'local'}",
-                    trace_id=run.run_id, parent=run.root_ctx,
+                    trace_id=run.run_id, parent=parent_ctx,
                     step=s.name, run=run.run_id):
                 if offloaded:
                     self._offload_with_recovery(run, s)

@@ -201,6 +201,12 @@ class LocalityPolicy(DispatchPriorityMixin):
         local_s, local_b = self._score(step, "local")
         scores = {"local": local_s}
         stale = {"local": local_b}
+        if step.fanout_role in ("scatter", "gather"):
+            # host-side closures over partition_fn/combine_fn: they slice
+            # and reassemble on the driver's tier; the shards between
+            # them are what the fabric parallelises
+            return PlacementDecision("local", False, scores, stale,
+                                     "fan-out scatter/gather runs local")
         if not step.remotable or self.cloud_tier not in self.cost_model.tiers:
             return PlacementDecision("local", False, scores, stale,
                                      "not remotable")

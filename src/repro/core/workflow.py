@@ -40,6 +40,35 @@ class Variable:
                                     # part of the workflow's input surface)
 
 
+@dataclass(frozen=True)
+class Fanout:
+    """Data-parallel fan-out annotation for a step.
+
+    A step carrying a ``Fanout`` never executes as declared: the
+    partitioner expands it at submit time into one *scatter* step (runs
+    ``partition_fn`` over each scattered input, publishing N independent
+    content-addressed shard values ``uri#k``), N *shard* sub-steps (the
+    original fn over its shard's slice plus the un-scattered broadcast
+    inputs), and one *gather* step (``combine_fn`` over the shard
+    outputs ``out#k``, publishing the step's declared outputs). Each
+    shard is an independent ready task: it is placed, fair-share-charged,
+    requeued on worker loss, and memoized (key = code fingerprint + that
+    shard's input digest) on its own.
+
+    ``scatter`` names which inputs are partitioned per shard (default:
+    the first declared input); the rest broadcast whole to every shard.
+    ``partition_fn(value, n)`` must return exactly ``n`` parts (default:
+    row split along axis 0); ``combine_fn(parts)`` reassembles the shard
+    outputs (default: row concatenation). Both should be module-level
+    (picklable) functions so checkpoints and workers can carry them —
+    the verifier's W061 flags closures/lambdas.
+    """
+    shards: int
+    scatter: Tuple[str, ...] = ()
+    partition_fn: Optional[Callable] = None
+    combine_fn: Optional[Callable] = None
+
+
 @dataclass
 class Step:
     name: str
@@ -59,6 +88,24 @@ class Step:
     # memoize=True runtime), None defers to the manager-wide default.
     # Only set True for deterministic, side-effect-free steps.
     memoizable: Optional[bool] = None
+    # data-parallel fan-out (see Fanout): set on the user-declared step;
+    # the partitioner's expansion replaces it with scatter/shard/gather
+    # steps whose fanout_role/fanout_parent/shard_index identify them
+    fanout: Optional[Fanout] = None
+    fanout_role: str = ""                      # "" | scatter | shard | gather
+    fanout_parent: str = ""                    # original step's name
+    shard_index: int = -1                      # k for shard steps
+    fanout_shards: int = 0                     # fan-out width N
+    # staged-call parameter names, parallel to ``inputs``: execution
+    # calls fn(**{arg_names[i]: value_of(inputs[i])}). None = inputs ARE
+    # the parameter names (the default contract). Lets an expanded shard
+    # step read ``P#3`` while its fn still receives ``P=``.
+    arg_names: Optional[Tuple[str, ...]] = None
+    # returned-dict keys, parallel to ``outputs``: the fn returns
+    # {out_names[i]: value} and execution publishes it as outputs[i].
+    # None = outputs ARE the returned keys. The shard twin of arg_names:
+    # the original fn still returns {"out": ...}, published as out#3.
+    out_names: Optional[Tuple[str, ...]] = None
     defined_at: str = ""                       # "file:line" of wf.step(...)
 
     def scope(self, wf: "Workflow") -> Tuple[str, ...]:

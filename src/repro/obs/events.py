@@ -66,6 +66,19 @@ EVENT_SCHEMA: Dict[str, EventSchema] = {e.kind: e for e in [
     _s("checkpoint",
        required=("n",),
        doc="Run checkpoint persisted (n = completed steps captured)."),
+    _s("scatter",
+       required=("shards", "parent"),
+       optional=("uris",),
+       doc="Fan-out scatter completed: the parent step's inputs were "
+           "partitioned into per-shard content-addressed values uri#k."),
+    _s("shard_done",
+       required=("shard", "parent"),
+       doc="One fan-out shard (shard = k, parent = the original step) "
+           "finished and published its out#k value."),
+    _s("gather",
+       required=("shards", "parent"),
+       doc="Fan-out gather completed: shard outputs were combined into "
+           "the parent step's declared outputs."),
 ]}
 
 

@@ -213,6 +213,10 @@ METRIC_CATALOG: Dict[str, str] = {
     "broker.warm_hits": "Tasks routed to a warm worker.",
     "compile_cache.entries": "Compiled-executable cache entries.",
     "compile_cache.hits": "Compiled-executable cache hits.",
+    "fanout.scatters": "Fan-out scatter steps completed.",
+    "fanout.shards_dispatched": "Fan-out shard steps granted a lane.",
+    "fanout.shards_completed": "Fan-out shard steps completed.",
+    "fanout.gathers": "Fan-out gather steps completed.",
     "mdss.resident_bytes": "Bytes resident across tiers.",
     "mdss.bytes_moved": "Bytes transferred between tiers.",
     "mdss.modeled_seconds": "Cost-model seconds charged to transfers.",

@@ -13,7 +13,7 @@ cases: ``{"wf": Workflow, ...extra verify kwargs}``) or a kwargs dict
 for the sanitizer (hazard cases: ``{"events": [...]}`` /
 ``{"installs": [...], "evictions": [...]}``).
 """
-from . import hazards, lint_graph, lint_memo, lint_offload
+from . import hazards, lint_fanout, lint_graph, lint_memo, lint_offload
 
 #: rule id -> (kind, make_defective, make_clean); kind in
 #: {"verify", "events", "store"}.
@@ -21,4 +21,5 @@ CASES = {}
 CASES.update(lint_graph.CASES)
 CASES.update(lint_offload.CASES)
 CASES.update(lint_memo.CASES)
+CASES.update(lint_fanout.CASES)
 CASES.update(hazards.CASES)

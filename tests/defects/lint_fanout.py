@@ -1,0 +1,106 @@
+"""Fan-out legality defects: broken specs, unshippable partition fns,
+gathers that drop shards, sibling shards racing on one URI.
+
+W060/W061 fire on the user-declared (unexpanded) step — a spec the
+partitioner refuses to expand survives to admission where the verifier
+names the defect. W062/W063 fire on the expanded scatter/shard/gather
+form (hand-built here, as a mutated or hand-rolled expansion would be).
+"""
+from repro.core.partitioner import split_rows
+from repro.core.workflow import Fanout, Workflow
+
+
+def _fn(**kw):
+    return {}
+
+
+def _wf(name):
+    return Workflow(name)
+
+
+# W060: a fan-out spec expansion cannot honour (zero shards).
+def w060_defective():
+    wf = _wf("fanout-spec")
+    wf.var("P")
+    wf.step("big", _fn, inputs=("P",), outputs=("out",),
+            fanout=Fanout(shards=0))
+    return {"wf": wf, "provided": {"P"}}
+
+
+def w060_clean():
+    wf = _wf("fanout-spec-clean")
+    wf.var("P")
+    wf.step("big", _fn, inputs=("P",), outputs=("out",),
+            fanout=Fanout(shards=2))
+    return {"wf": wf, "provided": {"P"}}
+
+
+# W061: partition_fn is a lambda — fabric workers and checkpoints cannot
+# pickle it.
+def w061_defective():
+    wf = _wf("fanout-pickle")
+    wf.var("P")
+    wf.step("big", _fn, inputs=("P",), outputs=("out",),
+            fanout=Fanout(shards=2, partition_fn=lambda v, n: [v] * n))
+    return {"wf": wf, "provided": {"P"}}
+
+
+def w061_clean():
+    wf = _wf("fanout-pickle-clean")
+    wf.var("P")
+    wf.step("big", _fn, inputs=("P",), outputs=("out",),
+            fanout=Fanout(shards=2, partition_fn=split_rows))
+    return {"wf": wf, "provided": {"P"}}
+
+
+# W062: a gather that never reads one sibling's output — that shard's
+# result silently vanishes from the combined value.
+def _shards(wf, outs=("out#0", "out#1")):
+    for k, o in enumerate(outs):
+        wf.step(f"big#{k}", _fn, inputs=("P",), outputs=(o,),
+                fanout_role="shard", fanout_parent="big",
+                shard_index=k, fanout_shards=2)
+
+
+def w062_defective():
+    wf = _wf("gather-miss")
+    wf.var("P")
+    _shards(wf)
+    wf.step("big.gather", _fn, inputs=("out#0",), outputs=("out",),
+            fanout_role="gather", fanout_parent="big", fanout_shards=2)
+    return {"wf": wf, "provided": {"P"}}
+
+
+def w062_clean():
+    wf = _wf("gather-miss-clean")
+    wf.var("P")
+    _shards(wf)
+    wf.step("big.gather", _fn, inputs=("out#0", "out#1"), outputs=("out",),
+            fanout_role="gather", fanout_parent="big", fanout_shards=2)
+    return {"wf": wf, "provided": {"P"}}
+
+
+# W063: two sibling shards of one fan-out write the same shard URI —
+# the surviving version depends on completion order.
+def w063_defective():
+    wf = _wf("sibling-ww")
+    wf.var("P")
+    _shards(wf, outs=("out#0", "out#0"))
+    wf.step("read", _fn, inputs=("out#0",), outputs=("r",))
+    return {"wf": wf, "provided": {"P"}}
+
+
+def w063_clean():
+    wf = _wf("sibling-ww-clean")
+    wf.var("P")
+    _shards(wf)
+    wf.step("read", _fn, inputs=("out#0", "out#1"), outputs=("r",))
+    return {"wf": wf, "provided": {"P"}}
+
+
+CASES = {
+    "W060": ("verify", w060_defective, w060_clean),
+    "W061": ("verify", w061_defective, w061_clean),
+    "W062": ("verify", w062_defective, w062_clean),
+    "W063": ("verify", w063_defective, w063_clean),
+}

@@ -1,0 +1,87 @@
+"""Schedule-space exploration throughput: schedules/sec and
+distinct-interleaving coverage for emcheck (repro.analysis.explorer).
+
+The explorer is CI infrastructure — smoke.sh gates on the canonical
+diamond exhausting inside its budget — so its own speed is a tier-1
+property. Reported: exhaustive DFS over the 6-step diamond (with the
+dedup + POR reductions that make exhaustion tractable), the same space
+with the reductions disabled (what the reductions buy), seeded random
+sampling on the two-tenant model too wide to exhaust, and ddmin
+minimization of a planted duplicate-done reproducer.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+from benchmarks.common import row, timeit
+from repro.analysis.explorer import (build_model, explore, minimize,
+                                     model_diamond, sample)
+
+SMOKE = bool(os.environ.get("ANALYSIS_SMOKE"))
+
+SUMMARY: Dict[str, float] = {}
+
+
+def main() -> List[str]:
+    # exhaustive DFS with dedup + POR (the smoke-gated configuration)
+    res = explore(model_diamond())
+    assert res.exhaustive and res.hazard_count == 0
+    t_exh = timeit(lambda: explore(model_diamond()), warmup=0,
+                   iters=1 if SMOKE else 2)
+    sched_per_s = res.schedules / t_exh
+
+    # the same space with reductions off, capped so it stays bounded:
+    # measures raw decision throughput and what dedup+POR prune
+    cap = 500 if SMOKE else 3000
+    t_raw = timeit(lambda: explore(model_diamond(), dedup=False, por=False,
+                                   max_schedules=cap),
+                   warmup=0, iters=1)
+    raw = explore(model_diamond(), dedup=False, por=False,
+                  max_schedules=cap)
+    raw_dec_per_s = raw.decisions / t_raw
+
+    # seeded sampling on a model too wide to exhaust
+    n_samples = 40 if SMOKE else 200
+    two = build_model("two_tenant")
+    t_smp = timeit(lambda: sample(two, schedules=n_samples, seed=0),
+                   warmup=0, iters=1)
+    smp = sample(two, schedules=n_samples, seed=0)
+    assert smp.hazard_count == 0
+
+    # ddmin a planted duplicate-done hazard down to its minimal core
+    buggy = model_diamond(bugs=("duplicate_done",))
+    found = explore(buggy, max_schedules=500, max_hazards=1)
+    schedule, _ = found.hazards[0]
+    t_min = timeit(lambda: minimize(buggy, schedule), warmup=0, iters=1)
+    small = minimize(buggy, schedule)
+
+    SUMMARY.update(
+        diamond_schedules=res.schedules,
+        diamond_coverage=len(res.coverage),
+        diamond_schedules_per_s=round(sched_per_s),
+        diamond_decisions=res.decisions,
+        dedup_cuts=res.deduped,
+        por_pruned=res.por_pruned,
+        raw_decisions_per_s=round(raw_dec_per_s),
+        sample_schedules_per_s=round(n_samples / t_smp),
+        sample_coverage=len(smp.coverage),
+        minimize_ms=round(t_min * 1e3, 2),
+        minimized_len=len(small),
+        found_len=len(schedule),
+    )
+    return [
+        row(f"explore_diamond_{res.schedules}sched", t_exh,
+            f"schedules_per_s={sched_per_s:.0f}"
+            f" coverage={len(res.coverage)}"),
+        row(f"explore_raw_{raw.schedules}sched", t_raw,
+            f"decisions_per_s={raw_dec_per_s:.0f}"),
+        row(f"explore_sample_{n_samples}ep", t_smp,
+            f"coverage={len(smp.coverage)}"),
+        row("explore_minimize_dup_done", t_min,
+            f"decisions={len(schedule)}->{len(small)}"),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

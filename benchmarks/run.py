@@ -35,8 +35,13 @@
                                           un-fanned step, per-shard memo
                                           + dedup on an incremental
                                           re-run)
+  bench_explore          beyond-paper    (emcheck schedule-space
+                                          exploration: schedules/sec,
+                                          distinct-interleaving coverage,
+                                          dedup+POR payoff, ddmin
+                                          minimization)
 
-Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_8.json`` next
+Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_9.json`` next
 to the repo root — per-bench wall clock, every CSV row, and each
 module's ``SUMMARY`` dict (bytes on the wire, speedups) — so future PRs
 have a perf baseline to regress against.
@@ -53,17 +58,18 @@ import sys
 import time
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                          os.pardir, "BENCH_8.json")
+                          os.pardir, "BENCH_9.json")
 
 
 def main() -> None:
     from benchmarks import (bench_analysis, bench_at, bench_dag,
-                            bench_dataplane, bench_fabric, bench_fanout,
-                            bench_lm_workflow, bench_locality, bench_mdss,
-                            bench_obs, bench_parallel_offload,
+                            bench_dataplane, bench_explore, bench_fabric,
+                            bench_fanout, bench_lm_workflow, bench_locality,
+                            bench_mdss, bench_obs, bench_parallel_offload,
                             bench_partitioner, bench_runtime)
     modules = [
         ("bench_analysis", bench_analysis),
+        ("bench_explore", bench_explore),
         ("bench_fanout", bench_fanout),
         ("bench_mdss", bench_mdss),
         ("bench_parallel_offload", bench_parallel_offload),
@@ -101,7 +107,7 @@ def main() -> None:
         print(f"# {name} done in {wall:.1f}s", file=sys.stderr)
     try:
         with open(BENCH_JSON, "w") as f:
-            json.dump({"bench_version": 8, "benches": report}, f, indent=2,
+            json.dump({"bench_version": 9, "benches": report}, f, indent=2,
                       sort_keys=True)
         print(f"# wrote {os.path.abspath(BENCH_JSON)}", file=sys.stderr)
     except OSError as e:  # pragma: no cover

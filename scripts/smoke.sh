@@ -15,7 +15,8 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== static analysis gate (emlint) =="
-# the lint must be able to lint itself (event/metric catalogue drift)...
+# the lint must be able to lint itself (event/metric catalogue drift +
+# the L010–L012 lock-discipline pass over src/)...
 python scripts/emlint.py --self
 # ...and every example + benchmark workflow must verify clean (warnings
 # are errors here; W020 infos are allowed). fabric_quickstart spawns
@@ -31,6 +32,49 @@ python scripts/emlint.py --strict \
 
 echo "== analysis bench (1k-step verify under its 100 ms budget) =="
 timeout 120 python -m benchmarks.bench_analysis
+
+echo "== explore bench (schedules/sec + interleaving coverage) =="
+ANALYSIS_SMOKE=1 timeout 300 python -m benchmarks.bench_explore
+
+echo "== emcheck smoke (exhaustive diamond + reproducer replay) =="
+timeout 300 python - <<'EOF'
+import time
+from repro.analysis.explorer import explore, model_diamond
+
+t0 = time.time()
+# gate 1: the canonical 6-step diamond exhausts its schedule space with
+# full distinct-interleaving coverage and zero hazards
+res = explore(model_diamond())
+assert res.exhaustive, "diamond schedule space not exhausted"
+assert res.hazard_count == 0, f"hazards on clean model: {res.hazard_rules()}"
+assert res.schedules == len(res.coverage), (
+    f"interleaving coverage lost: {len(res.coverage)} terminals for "
+    f"{res.schedules} schedules")
+print(f"emcheck: diamond exhausted — {res.schedules} schedules, "
+      f"{res.decisions} decisions, {res.deduped} dedup cuts, "
+      f"{res.por_pruned} POR prunes, 0 hazards "
+      f"in {time.time() - t0:.1f}s")
+EOF
+# gate 2: the planted duplicate-done race (the PR 4 bug behind the
+# duplicate_done flag) is found within 500 schedules, delta-debugged,
+# serialized byte-identically, and the reproducer replays the hazard
+REPRO_DIR="$(mktemp -d)"
+trap 'rm -rf "$REPRO_DIR"' EXIT
+rc=0
+python scripts/emcheck.py --model diamond --bug duplicate_done \
+    --max-schedules 500 --max-hazards 1 \
+    --out "$REPRO_DIR/race1.json" -q || rc=$?
+[ "$rc" -eq 1 ] || { echo "emcheck did not flag the planted race (rc=$rc)"; exit 1; }
+rc=0
+python scripts/emcheck.py --model diamond --bug duplicate_done \
+    --max-schedules 500 --max-hazards 1 \
+    --out "$REPRO_DIR/race2.json" -q || rc=$?
+[ "$rc" -eq 1 ] || { echo "emcheck second run rc=$rc"; exit 1; }
+cmp "$REPRO_DIR/race1.json" "$REPRO_DIR/race2.json" \
+    || { echo "reproducer serialization is not byte-identical"; exit 1; }
+python scripts/emcheck.py --replay "$REPRO_DIR/race1.json" \
+    || { echo "reproducer replay did not re-trigger the hazard"; exit 1; }
+echo "emcheck: planted race found, minimized, replayed byte-identically"
 
 echo "== tier-1 tests (fast lane) =="
 python -m pytest -x -q -m "not slow"

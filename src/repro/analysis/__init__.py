@@ -1,6 +1,7 @@
-"""Emerald correctness tooling: static verifier + dynamic sanitizer.
+"""Emerald correctness tooling: static verifier + dynamic sanitizer +
+schedule-space explorer.
 
-Three entry points, one finding model (``repro.analysis.findings``):
+Four entry points, one finding model (``repro.analysis.findings``):
 
   * :func:`verify` — rule-based static lint over a :class:`Workflow`
     (cycles with witness paths, dataflow races, offloadability,
@@ -12,13 +13,19 @@ Three entry points, one finding model (``repro.analysis.findings``):
     ``sanitizer.check_store(mdss)``); the ``--sanitize`` pytest fixture
     turns the whole tier-1 suite into a race detector.
   * :mod:`selfcheck` — source lint keeping ``emit(`` kinds and metric
-    names in lockstep with their registries (``emlint --self``).
+    names in lockstep with their registries, plus the AST lock-
+    discipline pass (acquisition order, blocking-under-lock,
+    predicate-loop waits) (``emlint --self``).
+  * :mod:`explorer` — deterministic schedule-space model checking
+    (``scripts/emcheck.py``): every explored interleaving replays
+    through the sanitizer plus cross-schedule invariants (H120–H124),
+    and hazardous schedules minimize to replayable reproducer files.
 
 This package depends only on ``repro.core.workflow`` /
 ``repro.core.migration`` / ``repro.obs`` — never on the runtime — so the
 runtime can import it for admission-time validation without a cycle.
 """
-from repro.analysis import sanitizer, selfcheck  # noqa: F401
+from repro.analysis import explorer, sanitizer, selfcheck  # noqa: F401
 from repro.analysis.findings import (ERROR, INFO, RULES, WARNING,  # noqa: F401
                                      Finding, RuleInfo, max_severity)
 from repro.analysis.verifier import WorkflowRejected, verify  # noqa: F401

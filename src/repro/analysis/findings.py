@@ -164,6 +164,31 @@ H111 = _rule("H111", ERROR, "evict-install-race",
              "a replica version was evicted that was never installed on "
              "that tier — eviction raced an in-flight install")
 
+# ------------------------------------------------- explorer (cross-schedule)
+H120 = _rule("H120", ERROR, "fence-epoch-regression",
+             "an install landed carrying a namespace epoch older than one "
+             "already observed for that namespace — a transfer that "
+             "started before drop_namespace() installed into the reused "
+             "namespace; fence the install on the live epoch")
+H121 = _rule("H121", ERROR, "memo-double-execution",
+             "one memo key (code fingerprint + input digests) executed "
+             "more than once under memoization — the in-flight entry "
+             "guard failed to make the second tenant a waiter")
+H122 = _rule("H122", ERROR, "fair-share-starvation",
+             "a run with ready steps and the smallest virtual time was "
+             "passed over for a full starvation window of dispatches — "
+             "the deficit-weighted scheduler is not serving the run it "
+             "owes the next slot")
+H123 = _rule("H123", ERROR, "residency-overshoot",
+             "a namespace's resident bytes exceeded its configured "
+             "per-tier budget — eviction did not run (or ran too late) "
+             "on the install that crossed the ceiling")
+H124 = _rule("H124", ERROR, "checkpoint-divergence",
+             "resuming from a checkpointed prefix converged to different "
+             "final content digests than the uninterrupted run — the "
+             "checkpoint froze an inconsistent (completed, vars) pair "
+             "or resume re-applied a non-idempotent step")
+
 # ---------------------------------------------------------------- selfcheck
 L001 = _rule("L001", ERROR, "unregistered-event-kind",
              "add the kind to repro.obs.events.EVENT_SCHEMA with its "
@@ -171,6 +196,22 @@ L001 = _rule("L001", ERROR, "unregistered-event-kind",
 L002 = _rule("L002", ERROR, "unregistered-metric",
              "add the name to repro.obs.metrics.METRIC_CATALOG with a "
              "one-line doc")
+L010 = _rule("L010", ERROR, "lock-order-inversion",
+             "two code paths acquire the same pair of locks in opposite "
+             "orders — a classic ABBA deadlock; pick one canonical order "
+             "(document it on the lock declarations) and fix the "
+             "inverted site")
+L011 = _rule("L011", WARNING, "blocking-call-under-lock",
+             "a blocking operation (sleep, socket recv/accept, untimed "
+             "wait on a foreign event, pickling) runs while a lock is "
+             "held — every other thread contending on that lock stalls "
+             "for the full blocking duration; move the slow work outside "
+             "the critical section")
+L012 = _rule("L012", ERROR, "cond-wait-no-predicate-loop",
+             "Condition.wait() outside a while-predicate loop — spurious "
+             "wakeups and missed notifies are legal, so the waiter must "
+             "re-check its predicate in a loop (while not pred: "
+             "cond.wait())")
 
 
 def max_severity(findings) -> str:

@@ -139,13 +139,14 @@ def check_store(mdss_or_installs, evictions=None, *,
 
 def check_runtime(runtime, handles) -> List[Finding]:
     """Convenience: sanitize finished ``handles`` of ``runtime`` plus
-    its store's replica log. Only runs that finished successfully are
-    paired strictly (failed/cancelled runs legitimately drop dones)."""
+    its store's replica log. Failed/cancelled runs are checked too —
+    duplicate dones (H101) and orphan completions (H102) are hazards on
+    any run; only the lost-completion pairing (H103) is restricted to
+    runs that finished successfully, since an aborted run legitimately
+    drops dones."""
     out: List[Finding] = []
     for h in handles:
         state = getattr(h, "state", "done")
-        if state in ("failed", "cancelled"):
-            continue
         out.extend(check(h.events, completed_run=(state == "done")))
     mdss = getattr(runtime, "mdss", None)
     if mdss is not None:

@@ -107,6 +107,12 @@ class Task:
 
 
 class Broker:
+    #: failsafe re-check interval for the dispatch loop's condition
+    #: wait — bounds how long a lost wakeup can delay noticing
+    #: ``_closed`` (teardown), without putting a polling floor under
+    #: normal dispatch latency (every real state change still notifies)
+    _FAILSAFE_WAKEUP_S = 1.0
+
     def __init__(self, pool: WorkerPool, *, max_attempts: int = 3,
                  heartbeat_timeout_s: float = 5.0, replace_dead: bool = True,
                  dedup: bool = True):
@@ -376,11 +382,14 @@ class Broker:
                             del self._queue[best[0]]
                     if task is not None:
                         break
-                    # untimed: every state change that could make work
+                    # every state change that could make work
                     # dispatchable (submit, worker idle/added, death,
-                    # shutdown) notify_alls this condition — no polling
-                    # tax, no 100 ms dispatch latency floor
-                    self._cond.wait()
+                    # shutdown) notify_alls this condition, so the
+                    # timeout is a shutdown failsafe only: if a wakeup
+                    # is ever lost, the predicate is re-checked at 1 Hz
+                    # instead of wedging close() forever — dispatch
+                    # latency still has no polling floor
+                    self._cond.wait(timeout=self._FAILSAFE_WAKEUP_S)
                 if self._closed:
                     return
                 worker.state = "busy"

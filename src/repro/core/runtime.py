@@ -360,7 +360,8 @@ class EmeraldRuntime:
                  memoize: Optional[bool] = None,
                  telemetry: bool = True,
                  tracer: Optional[Tracer] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 dispatch_hook=None):
         if manager is None:
             tiers = tiers or default_tiers()
             cm = CostModel(tiers)
@@ -396,6 +397,11 @@ class EmeraldRuntime:
             # see MigrationManager; Step.memoizable overrides per step.
             self.manager.memoize = memoize
 
+        # schedule-exploration seam (emcheck): when set, the hook is
+        # offered every dispatch choice — hook(lane, sorted run_ids) ->
+        # chosen run_id or None to defer to fair share. Runs on the
+        # driver thread; production leaves it None.
+        self.dispatch_hook = dispatch_hook
         self._fair = FairShare()
         self._inbox: "queue.SimpleQueue" = queue.SimpleQueue()
         self._runs: Dict[str, _Run] = {}
@@ -996,7 +1002,14 @@ class EmeraldRuntime:
                          and not r.cancelled}
                 if not cands:
                     break
-                run = cands[self._fair.pick(cands)]
+                chosen = None
+                if self.dispatch_hook is not None:
+                    chosen = self.dispatch_hook(
+                        "offload" if lane else "local",
+                        sorted(cands))
+                if chosen is None:
+                    chosen = self._fair.pick(cands)
+                run = cands[chosen]
                 _, _, name = heapq.heappop(run.ready[lane])
                 s = run.steps[name]
                 decision = run.placements.pop(name, None)

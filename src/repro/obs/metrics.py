@@ -213,6 +213,11 @@ METRIC_CATALOG: Dict[str, str] = {
     "broker.warm_hits": "Tasks routed to a warm worker.",
     "compile_cache.entries": "Compiled-executable cache entries.",
     "compile_cache.hits": "Compiled-executable cache hits.",
+    "emcheck.schedules_explored": "Complete interleavings model-checked.",
+    "emcheck.states_deduped": "Explorer prefixes cut by visited-state dedup.",
+    "emcheck.por_pruned": "Branches collapsed by partial-order reduction.",
+    "emcheck.hazards_found": "Findings raised across explored schedules.",
+    "emcheck.replays": "Reproducer schedules replayed.",
     "fanout.scatters": "Fan-out scatter steps completed.",
     "fanout.shards_dispatched": "Fan-out shard steps granted a lane.",
     "fanout.shards_completed": "Fan-out shard steps completed.",

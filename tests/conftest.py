@@ -79,11 +79,17 @@ def hazard_sanitizer(request, monkeypatch):
     findings = []
     stores = {}
     for rt, h in records:
-        # only runs that finished cleanly carry the full dispatch/done
-        # pairing contract; failed/cancelled runs legitimately drop dones
-        if getattr(h, "state", "") != "done":
+        # replay every settled run: duplicate dones (H101) and orphan
+        # completions (H102) are hazards on failed/cancelled runs too —
+        # only the full dispatch/done pairing (H103 lost-completion) is
+        # reserved for runs that finished cleanly. Still-running
+        # handles (a test that abandoned its submission) are skipped:
+        # their event streams are legitimately mid-flight.
+        state = getattr(h, "state", "")
+        if state not in ("done", "failed", "cancelled"):
             continue
-        findings += sanitizer.check(h.events, completed_run=True)
+        findings += sanitizer.check(h.events,
+                                    completed_run=(state == "done"))
         stores[id(rt.mdss)] = rt.mdss
     for mdss in stores.values():
         findings += sanitizer.check_store(mdss)

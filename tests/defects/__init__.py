@@ -8,18 +8,23 @@ the defective artifact and stays silent on the twin — the
 failing-before test each rule was built against.
 
 A case is ``(rule_id, make_defective, make_clean)`` where the factories
-return either a kwargs dict for :func:`repro.analysis.verify` (lint
-cases: ``{"wf": Workflow, ...extra verify kwargs}``) or a kwargs dict
-for the sanitizer (hazard cases: ``{"events": [...]}`` /
-``{"installs": [...], "evictions": [...]}``).
+return a kwargs dict for :func:`repro.analysis.verify` (lint cases:
+``{"wf": Workflow, ...extra verify kwargs}``), for the sanitizer
+(hazard cases: ``{"events": [...]}`` / ``{"installs": [...],
+"evictions": [...]}``), for the explorer's trace checker
+(cross-schedule hazards: the :func:`explorer.check_trace` dict shape),
+or for the source lint (lock-discipline cases: ``{"text": snippet}``).
 """
-from . import hazards, lint_fanout, lint_graph, lint_memo, lint_offload
+from . import (hazards, hazards_explore, lint_fanout, lint_graph,
+               lint_locks, lint_memo, lint_offload)
 
 #: rule id -> (kind, make_defective, make_clean); kind in
-#: {"verify", "events", "store"}.
+#: {"verify", "events", "store", "trace", "source"}.
 CASES = {}
 CASES.update(lint_graph.CASES)
 CASES.update(lint_offload.CASES)
 CASES.update(lint_memo.CASES)
 CASES.update(lint_fanout.CASES)
+CASES.update(lint_locks.CASES)
 CASES.update(hazards.CASES)
+CASES.update(hazards_explore.CASES)

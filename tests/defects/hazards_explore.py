@@ -1,0 +1,90 @@
+"""Explorer cross-schedule hazard corpus: one minimal trace artifact
+per H12x invariant, with clean twins. The artifacts are the dict shape
+:func:`repro.analysis.explorer.check_trace` accepts — each carries only
+the trace section its rule replays, exactly what a serialized explored
+schedule would produce."""
+
+
+# H120: an install lands carrying a namespace epoch older than one
+# already observed — a pre-drop transfer writing into the reused
+# namespace (install rows: (uri, tier, version, epoch, t)).
+def h120_defective():
+    return {"installs": [("ns/u", "local", 1, 0, 1.0),
+                         ("ns/v", "local", 1, 1, 2.0),   # epoch 1 live
+                         ("ns/u", "local", 1, 0, 3.0)],  # stale epoch 0
+            "evictions": []}
+
+
+def h120_clean():
+    # the stale write-back was fenced: only live-epoch installs land
+    return {"installs": [("ns/u", "local", 1, 0, 1.0),
+                         ("ns/v", "local", 1, 1, 2.0),
+                         ("ns/u", "local", 1, 1, 3.0)],
+            "evictions": []}
+
+
+# H121: one memo key executed twice — the second tenant should have
+# joined the in-flight entry as a waiter (rows: (key, run, step, t)).
+def h121_defective():
+    return {"executions": [("k1", "A", "s", 1.0),
+                           ("k1", "B", "s", 2.0)]}
+
+
+def h121_clean():
+    # B's distinct inputs key differently; same key never re-executes
+    return {"executions": [("k1", "A", "s", 1.0),
+                           ("k2", "B", "s", 2.0)]}
+
+
+# H122: a run holding the smallest virtual time with ready steps is
+# passed over for a full starvation window of dispatch rounds
+# (rows: (chosen_run, owed_runs)).
+def h122_defective():
+    return {"dispatch_rounds": [("A", ("B",)), ("A", ("B",)),
+                                ("A", ("B",)), ("A", ("B",))],
+            "starvation_window": 4}
+
+
+def h122_clean():
+    # the scheduler serves the owed run before the window closes
+    return {"dispatch_rounds": [("A", ("B",)), ("A", ("B",)),
+                                ("A", ("B",)), ("B", ("B",))],
+            "starvation_window": 4}
+
+
+# H123: resident bytes exceed the configured per-(namespace, tier)
+# budget after a decision (rows: (t, ns, tier, bytes)).
+def h123_defective():
+    return {"budgets": {"A:cloud": 2},
+            "residency": [(1.0, "A", "cloud", 1),
+                          (2.0, "A", "cloud", 3)]}
+
+
+def h123_clean():
+    # eviction ran on the crossing install: residency never overshoots
+    return {"budgets": {"A:cloud": 2},
+            "residency": [(1.0, "A", "cloud", 1),
+                          (2.0, "A", "cloud", 2)]}
+
+
+# H124: resuming from a checkpointed prefix converges to different
+# final content digests than the uninterrupted run.
+def h124_defective():
+    return {"base_digests": {"A": {"x": "d1", "y": "d2"}},
+            "resumed": [{"prefix": 3,
+                         "digests": {"A": {"x": "d1", "y": "DIVERGED"}}}]}
+
+
+def h124_clean():
+    return {"base_digests": {"A": {"x": "d1", "y": "d2"}},
+            "resumed": [{"prefix": 3,
+                         "digests": {"A": {"x": "d1", "y": "d2"}}}]}
+
+
+CASES = {
+    "H120": ("trace", h120_defective, h120_clean),
+    "H121": ("trace", h121_defective, h121_clean),
+    "H122": ("trace", h122_defective, h122_clean),
+    "H123": ("trace", h123_defective, h123_clean),
+    "H124": ("trace", h124_defective, h124_clean),
+}

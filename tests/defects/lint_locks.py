@@ -1,0 +1,98 @@
+"""Lock-discipline lint corpus: one minimal defective source snippet
+per L01x rule, with clean twins. The snippets are linted by
+:func:`repro.analysis.selfcheck.check_snippet` via the ``"source"``
+corpus kind."""
+
+import textwrap
+
+
+def _src(text):
+    return {"text": textwrap.dedent(text)}
+
+
+# L010: two paths acquire the same pair of locks in opposite orders.
+def l010_defective():
+    return _src("""
+        class S:
+            def a(self):
+                with self._mu_lock:
+                    with self._io_lock:
+                        self.flush()
+
+            def b(self):
+                with self._io_lock:
+                    with self._mu_lock:
+                        self.flush()
+        """)
+
+
+def l010_clean():
+    # both paths honour the canonical mu -> io order
+    return _src("""
+        class S:
+            def a(self):
+                with self._mu_lock:
+                    with self._io_lock:
+                        self.flush()
+
+            def b(self):
+                with self._mu_lock:
+                    with self._io_lock:
+                        self.flush()
+        """)
+
+
+# L011: a blocking call runs inside the critical section.
+def l011_defective():
+    return _src("""
+        import time
+
+        class S:
+            def poke(self):
+                with self._state_lock:
+                    time.sleep(0.5)
+                    return self.state
+        """)
+
+
+def l011_clean():
+    # the slow work happens outside the lock
+    return _src("""
+        import time
+
+        class S:
+            def poke(self):
+                time.sleep(0.5)
+                with self._state_lock:
+                    return self.state
+        """)
+
+
+# L012: a condition wait guarded by `if` instead of a predicate loop.
+def l012_defective():
+    return _src("""
+        class S:
+            def take(self):
+                with self._cond:
+                    if not self.items:
+                        self._cond.wait()
+                    return self.items.pop()
+        """)
+
+
+def l012_clean():
+    return _src("""
+        class S:
+            def take(self):
+                with self._cond:
+                    while not self.items:
+                        self._cond.wait()
+                    return self.items.pop()
+        """)
+
+
+CASES = {
+    "L010": ("source", l010_defective, l010_clean),
+    "L011": ("source", l011_defective, l011_clean),
+    "L012": ("source", l012_defective, l012_clean),
+}

@@ -19,8 +19,9 @@ import numpy as np
 import pytest
 
 from defects import CASES
-from repro.analysis import (ERROR, RULES, WorkflowRejected, sanitizer,
-                            verify)
+from repro.analysis import (ERROR, RULES, WorkflowRejected, explorer,
+                            sanitizer, verify)
+from repro.analysis.selfcheck import check_snippet
 from repro.core import (CostModel, EmeraldRuntime, MDSS, MigrationManager,
                         Workflow, default_tiers)
 from repro.core.workflow import WorkflowError
@@ -42,6 +43,10 @@ def run_case(kind, kwargs):
                                completed_run=kwargs.get("completed_run", True))
     if kind == "store":
         return sanitizer.check_store(kwargs["installs"], kwargs["evictions"])
+    if kind == "trace":
+        return explorer.check_trace(kwargs)
+    if kind == "source":
+        return check_snippet(kwargs["text"])
     raise AssertionError(f"unknown case kind {kind}")
 
 
@@ -56,9 +61,11 @@ def test_defect_corpus_fires_exact_rule(rule):
 
 
 def test_corpus_covers_every_registered_rule():
-    # L-rules are exercised by the drift canary in test_obs; everything
-    # else must have a seeded defect here.
-    expected = {r for r in RULES if not r.startswith("L")}
+    # L001/L002 are exercised by the drift canary in test_obs;
+    # everything else — verifier rules, sanitizer hazards, explorer
+    # cross-schedule hazards, lock lints — must have a seeded defect
+    # + clean twin here.
+    expected = {r for r in RULES if r not in ("L001", "L002")}
     assert set(CASES) == expected
 
 

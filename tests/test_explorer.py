@@ -1,0 +1,228 @@
+"""emcheck: deterministic schedule-space exploration.
+
+Covers the explorer's acceptance surface:
+
+  * the canonical 6-step diamond exhausts its interleaving space with
+    zero hazards and full distinct-terminal coverage,
+  * every planted bug flag is detected by its scenario model within a
+    bounded schedule budget, while the clean twin model stays silent,
+  * the planted PR 4 duplicate-done race is found, delta-debugged to a
+    minimal decision list, serialized byte-identically, and replayed
+    deterministically from the reproducer file,
+  * exploration and seeded sampling are bit-for-bit deterministic,
+  * the runtime's ``dispatch_hook`` seam lets an external policy drive
+    real dispatch order without tripping the sanitizer,
+  * the broker's dispatch loop survives a lost shutdown wakeup (the
+    failsafe timed wait — the hang emcheck-driven teardowns hit).
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis import explorer, sanitizer
+from repro.analysis.explorer import (build_model, check_resume, explore,
+                                     load_reproducer, minimize, model_diamond,
+                                     replay, replay_reproducer, run_benign,
+                                     sample, save_reproducer)
+from repro.cloud.broker import Broker
+from repro.core import (CostModel, EmeraldRuntime, MDSS, MigrationManager,
+                        Workflow, default_tiers)
+
+
+def emerald():
+    tiers = default_tiers()
+    cm = CostModel(tiers)
+    return MigrationManager(tiers, MDSS(tiers, cost_model=cm), cm)
+
+
+# ------------------------------------------------------------ exhaustive
+def test_diamond_exhausts_clean():
+    res = explore(model_diamond())
+    assert res.exhaustive
+    assert res.hazard_count == 0 and res.hazards == []
+    # every complete interleaving reaches a distinct recorded terminal
+    assert res.schedules == len(res.coverage)
+    assert res.schedules > 1000          # the space is genuinely explored
+    assert res.por_pruned > 0            # POR found commuting completions
+    assert res.deduped > 0               # dedup cut revisited states
+
+
+def test_explore_is_deterministic():
+    a = explore(model_diamond())
+    b = explore(model_diamond())
+    assert (a.schedules, a.decisions, a.deduped, a.por_pruned) == \
+           (b.schedules, b.decisions, b.deduped, b.por_pruned)
+    assert a.coverage == b.coverage
+
+
+def test_sample_is_seed_deterministic():
+    m = build_model("two_tenant", bugs=("unfair",))
+    a = sample(m, schedules=40, seed=7)
+    b = sample(m, schedules=40, seed=7)
+    assert a.hazard_count == b.hazard_count
+    assert a.coverage == b.coverage
+    assert [s for s, _ in a.hazards] == [s for s, _ in b.hazards]
+
+
+# ----------------------------------------------------- planted bug flags
+# (model, bugs, expected rule, explore kwargs) — each scenario model must
+# find its planted defect inside the budget and stay silent without it.
+SCENARIOS = [
+    ("diamond", ("duplicate_done",), "H101", {}),
+    ("resubmit", ("stale_install",), "H120", {}),
+    ("memo_pair", ("memo_no_guard",), "H121", {}),
+    ("budget", ("no_evict",), "H123", {}),
+    ("ckpt_chain", ("ckpt_lost_step",), "H124", {"resume_check": True}),
+]
+
+
+@pytest.mark.parametrize("name,bugs,rule,kw",
+                         SCENARIOS, ids=[s[2] for s in SCENARIOS])
+def test_planted_bug_detected_and_clean_twin_silent(name, bugs, rule, kw):
+    buggy = explore(build_model(name, bugs=bugs), max_schedules=4000,
+                    max_hazards=1, **kw)
+    assert rule in buggy.hazard_rules(), \
+        f"{rule} not found: {buggy.hazard_rules()}"
+    clean = explore(build_model(name), max_schedules=4000, **kw)
+    assert clean.hazard_count == 0, clean.hazard_rules()
+
+
+def test_unfair_scheduler_starves_within_sampled_budget():
+    # two_tenant is too wide to exhaust; seeded sampling must still
+    # surface the starvation window.
+    res = sample(build_model("two_tenant", bugs=("unfair",)),
+                 schedules=120, seed=0)
+    assert "H122" in res.hazard_rules()
+    clean = sample(build_model("two_tenant"), schedules=120, seed=0)
+    assert clean.hazard_count == 0, clean.hazard_rules()
+
+
+# ------------------------------------- planted race: find/minimize/replay
+def test_duplicate_done_found_minimized_and_replayable(tmp_path):
+    model = model_diamond(bugs=("duplicate_done",))
+    res = explore(model, max_schedules=500, max_hazards=1)
+    assert res.hazard_count >= 1          # found within K=500 schedules
+    schedule, findings = res.hazards[0]
+    assert "H101" in {f.rule for f in findings}
+
+    small = minimize(model, schedule)
+    assert len(small) <= len(schedule)
+    assert any(d.startswith("ghost:") for d in small)
+    # 1-minimality: dropping any single decision loses the hazard
+    for i in range(len(small)):
+        probe = small[:i] + small[i + 1:]
+        sim = replay(model, probe, strict=False)
+        run_benign(sim)
+        rules = {f.rule for f in explorer.check_trace(sim.trace())}
+        assert "H101" not in rules, f"decision {small[i]} was removable"
+
+    path = tmp_path / "repro.json"
+    save_reproducer(str(path), model, small, findings)
+    first = path.read_bytes()
+    save_reproducer(str(path), model, small, findings)
+    assert path.read_bytes() == first     # byte-identical serialization
+
+    doc = load_reproducer(str(path))
+    assert doc["emcheck_version"] == explorer.EMCHECK_VERSION
+    assert doc["model"] == {"name": "diamond", "params": {},
+                            "bugs": ["duplicate_done"]}
+    got, ok = replay_reproducer(doc)      # model rebuilt from registry
+    assert ok and "H101" in {f.rule for f in got}
+    got2, ok2 = replay_reproducer(doc)
+    assert ok2 and [str(f) for f in got2] == [str(f) for f in got]
+
+
+def test_replay_strict_rejects_infeasible_decision():
+    with pytest.raises(ValueError, match="not enabled"):
+        replay(model_diamond(), ["complete:A:src"])
+
+
+def test_fault_injection_stays_hazard_free():
+    # crashes burn retries and may fail runs, but a correct model must
+    # never turn a fault into a hazard verdict.
+    m = model_diamond()
+    m.max_crashes = 2
+    res = sample(m, schedules=80, seed=3)
+    assert res.hazard_count == 0, res.hazard_rules()
+
+
+def test_resume_check_clean_on_correct_checkpointing():
+    m = build_model("ckpt_chain")
+    sim = explorer.Simulation(m)
+    run_benign(sim)
+    assert check_resume(m, sim.schedule) == []
+
+
+# --------------------------------------------------- runtime dispatch seam
+def test_dispatch_hook_drives_real_runtime():
+    seen = []
+
+    def hook(lane, run_ids):
+        seen.append((lane, tuple(run_ids)))
+        return run_ids[-1]                # force last-submitted-first
+
+    rt = EmeraldRuntime(emerald(), max_workers=2, telemetry=False,
+                        dispatch_hook=hook)
+    try:
+        handles = []
+        for i in range(3):
+            wf = Workflow(f"hooked{i}")
+            wf.var("x")
+            wf.step("a", lambda x: {"u": x * 2}, inputs=("x",),
+                    outputs=("u",), jax_step=False)
+            wf.step("b", lambda u: {"out": u + 1}, inputs=("u",),
+                    outputs=("out",), jax_step=False)
+            handles.append(rt.submit(wf, {"x": np.float64(i)}))
+        for i, h in enumerate(handles):
+            assert float(h.result()["out"]) == 2.0 * i + 1.0
+            assert sanitizer.check(h.events, completed_run=True) == []
+        assert seen and all(lane in ("local", "offload")
+                            for lane, _ in seen)
+    finally:
+        rt.close()
+
+
+def test_dispatch_hook_none_defers_to_fair_share():
+    rt = EmeraldRuntime(emerald(), max_workers=2, telemetry=False,
+                        dispatch_hook=lambda lane, run_ids: None)
+    try:
+        wf = Workflow("deferred")
+        wf.var("x")
+        wf.step("a", lambda x: {"out": x + 1}, inputs=("x",),
+                outputs=("out",), jax_step=False)
+        h = rt.submit(wf, {"x": np.float64(1.0)})
+        assert float(h.result()["out"]) == 2.0
+    finally:
+        rt.close()
+
+
+# ------------------------------------------------- broker shutdown wakeup
+class _NullPool:
+    def spawn(self):
+        raise AssertionError("test broker must not spawn workers")
+
+    def kill(self, h):
+        pass
+
+    def close(self):
+        pass
+
+
+def test_broker_shutdown_survives_lost_wakeup(monkeypatch):
+    """With no workers the dispatch loop parks in its condition wait.
+    Suppress the shutdown notification entirely: the failsafe timed
+    wait must still notice ``_closed`` and let the thread exit —
+    before the fix the untimed ``wait()`` wedged teardown forever."""
+    monkeypatch.setattr(Broker, "_FAILSAFE_WAKEUP_S", 0.05)
+    broker = Broker(_NullPool())
+    try:
+        assert broker._dispatcher.is_alive()
+        monkeypatch.setattr(broker._cond, "notify_all", lambda: None)
+        broker.shutdown()
+        broker._dispatcher.join(timeout=3.0)
+        assert not broker._dispatcher.is_alive()
+    finally:
+        monkeypatch.undo()
+        broker.shutdown()

@@ -330,6 +330,30 @@ def test_every_emit_call_site_is_registered(tmp_path):
     assert rules == {"L001", "L002"}
 
 
+def test_dynamic_metric_names_are_linted(tmp_path):
+    """Drift canary for the dynamic-name extension: dotted metric / event
+    names built with f-strings or ``+`` concatenation are checked against
+    the registries as prefix patterns, not skipped."""
+    from repro.analysis.selfcheck import check_snippet
+    # a dynamic pattern whose prefix matches no catalogued metric drifts
+    bad = ('def f(metrics, run, k):\n'
+           '    metrics.inc(f"nosuch.{k}_total")\n'
+           '    run.emit(f"bogus_{k}", object())\n')
+    rules = {f.rule for f in check_snippet(bad)}
+    assert rules == {"L001", "L002"}
+    # patterns under a registered family are accepted, either spelling
+    ok = ('def f(metrics, kind):\n'
+          '    metrics.inc(f"emcheck.{kind}")\n'
+          '    metrics.inc("fanout." + kind)\n')
+    assert check_snippet(ok) == []
+    # and the same contract holds through the file-tree entry point
+    drift = tmp_path / "dyn.py"
+    drift.write_text('def f(metrics, k):\n'
+                     '    metrics.observe(f"nosuch.{k}.seconds", 1.0)\n')
+    from repro.analysis import selfcheck
+    assert {f.rule for f in selfcheck.check_source(str(tmp_path))} == {"L002"}
+
+
 def test_validate_event():
     validate_event("offload", {"seconds": 0.1, "bytes_in": 3})
     with pytest.raises(ValueError, match="unregistered"):

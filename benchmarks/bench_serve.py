@@ -1,0 +1,207 @@
+"""Serving front door: batched vs unbatched decode under open-loop load.
+
+Eight interactive tenants generate decode requests on a deterministic
+seeded Poisson schedule (open loop: a request is issued at its scheduled
+arrival regardless of earlier completions, so queueing delay shows up in
+latency instead of silently throttling the offered rate). One background
+batch tenant shares the runtime through the admission queue. The same
+schedule runs through two arms:
+
+  * **unbatched** — every request is its own interactive-priority
+    submission through the shared :class:`EmeraldRuntime`: one
+    partition/validate/dispatch round trip per decode, the paper's
+    fine-grained-task overhead regime.
+  * **batched** — every request joins the :class:`FrontDoor` coalescer;
+    concurrent requests fuse into ONE dispatch per flush window, so the
+    per-dispatch fixed cost is paid once per batch.
+
+The synthetic decode sleeps ``KERNEL_S + ROW_S * rows``: a fixed
+per-dispatch cost (kernel launch + sampling + host sync) plus a small
+marginal per-row cost, so fusion honestly amortises the fixed part and
+nothing else. The offered rate (~2000 req/s) deliberately exceeds the
+unbatched arm's service capacity (~4 lanes / ~10 ms each): the unbatched
+arm saturates and queues while the coalescer's batches grow to match
+load — the smoke gate asserts >= 2x decode throughput for the batched
+arm at a p99 no worse.
+"""
+from __future__ import annotations
+
+import gc
+import os
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import EmeraldRuntime, Workflow, partition
+from repro.launch.serve import FrontDoor
+
+SMOKE = bool(os.environ.get("SERVE_SMOKE"))
+
+TENANTS = 8
+REQS = 10 if SMOKE else 24       # interactive requests per tenant
+MEAN_GAP_S = 0.004               # per-tenant Poisson mean inter-arrival
+KERNEL_S = 0.010                 # fixed per-dispatch decode cost
+ROW_S = 0.0001                   # marginal per-row decode cost
+LANES = 4                        # local lanes on the shared runtime
+WINDOW_S = 0.008                 # coalescer flush window
+MAX_BATCH = 32
+SLO_S = 0.05                     # per-request deadline (early-flush hint)
+WIDTH = 16                       # token-vector width
+BG_WORK_S = 0.09                 # background batch tenant's lane time
+
+SUMMARY: Dict[str, dict] = {}    # picked up by run.py
+
+
+# ------------------------------------------------------------ synthetic decode
+def _decode(tokens):
+    """Batched row-independent decode: fixed dispatch cost + per-row."""
+    arr = np.asarray(tokens)
+    rows = arr.shape[0] if arr.ndim == 2 else 1
+    time.sleep(KERNEL_S + ROW_S * rows)
+    return arr * 2.0 + 1.0
+
+
+def _decode_step(tokens):
+    return {"logits": _decode(tokens)}
+
+
+def make_decode_wf(name: str = "serve-decode-unbatched") -> Workflow:
+    """The per-request workflow of the unbatched arm (the FrontDoor
+    builds the identically-shaped fused workflow internally)."""
+    wf = Workflow(name)
+    wf.var("tokens")
+    wf.step("decode", _decode_step, inputs=("tokens",), outputs=("logits",),
+            jax_step=False)
+    return wf
+
+
+def _bg_work(x):
+    time.sleep(BG_WORK_S)
+    return {"y": np.asarray(x) + 1.0}
+
+
+def make_batch_wf(name: str = "serve-batch-tenant") -> Workflow:
+    wf = Workflow(name)
+    wf.var("x")
+    wf.step("bg", _bg_work, inputs=("x",), outputs=("y",), jax_step=False)
+    return wf
+
+
+# ------------------------------------------------------------------ load gen
+def _schedule() -> List[List[float]]:
+    """Per-tenant arrival offsets; the fixed seed makes both arms replay
+    the exact same open-loop load."""
+    rng = np.random.default_rng(7)
+    return [list(np.cumsum(rng.exponential(MEAN_GAP_S, REQS)))
+            for _ in range(TENANTS)]
+
+
+def run_arm(batched: bool) -> Dict[str, float]:
+    """One full open-loop run; returns throughput + latency stats."""
+    # drain any inherited gen2 backlog now: a deferred full collection
+    # (~200 ms after a heavy preceding bench) firing mid-run stalls the
+    # flush thread and smears every latency percentile
+    gc.collect()
+    schedule = _schedule()
+    lock = threading.Lock()
+    lat: List[float] = []        # scheduled-arrival -> completion seconds
+    done_at: List[float] = []
+    errors: List[BaseException] = []
+    with EmeraldRuntime(local_workers=LANES) as rt:
+        fd = pwf = None
+        if batched:
+            fd = FrontDoor(rt, _decode, window_s=WINDOW_S,
+                           max_batch=MAX_BATCH)
+        else:
+            # partitioned once, but every request still pays the full
+            # per-run admission path (verify + namespace + dispatch)
+            pwf = partition(make_decode_wf())
+        # the batch co-tenant enters through the admission queue and
+        # occupies a lane while the interactive load ramps (same in
+        # both arms)
+        bg = rt.submit(make_batch_wf(), {"x": np.zeros(4)}, park=True)
+        t0 = time.perf_counter()
+
+        def issue(arrive: float, tokens: np.ndarray):
+            try:
+                delay = t0 + arrive - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+                if batched:
+                    out = np.asarray(
+                        fd.decode(tokens, deadline_s=SLO_S).result(120))
+                else:
+                    out = np.asarray(
+                        rt.submit(pwf, {"tokens": tokens},
+                                  fetch=("logits",),
+                                  priority=1).result(120)["logits"])
+                t_done = time.perf_counter()
+                np.testing.assert_allclose(out, tokens * 2.0 + 1.0)
+                with lock:
+                    lat.append(t_done - (t0 + arrive))
+                    done_at.append(t_done)
+            except BaseException as e:  # pragma: no cover - surfaced below
+                with lock:
+                    errors.append(e)
+
+        threads = []
+        for ti, arrivals in enumerate(schedule):
+            tokens = np.full(WIDTH, float(ti), np.float64)
+            for arrive in arrivals:
+                threads.append(threading.Thread(
+                    target=issue, args=(arrive, tokens), daemon=True))
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(180)
+        if errors:
+            raise errors[0]
+        assert len(lat) == TENANTS * REQS
+        np.testing.assert_allclose(bg.result(120)["y"], np.ones(4))
+        makespan = max(done_at) - t0
+        stats = {
+            "rps": len(lat) / makespan,
+            "makespan_s": makespan,
+            "p50_ms": float(np.percentile(lat, 50)) * 1e3,
+            "p99_ms": float(np.percentile(lat, 99)) * 1e3,
+        }
+        if batched:
+            snap = fd.stats()
+            stats["flushes"] = snap["flushes"]
+            stats["avg_batch"] = snap["avg_batch"]
+            fd.close()
+        return stats
+
+
+# ---------------------------------------------------------------- driver
+def main() -> List[str]:
+    un = run_arm(batched=False)
+    ba = run_arm(batched=True)
+    speedup = ba["rps"] / un["rps"]
+    SUMMARY["serve"] = {
+        "tenants": TENANTS,
+        "requests": TENANTS * REQS,
+        "offered_rps": round(TENANTS / MEAN_GAP_S, 1),
+        "unbatched": {k: round(v, 3) for k, v in un.items()},
+        "batched": {k: round(v, 3) for k, v in ba.items()},
+        "speedup_x": round(speedup, 2),
+    }
+    return [
+        row("serve_unbatched", un["makespan_s"],
+            f"rps={un['rps']:.0f} p50={un['p50_ms']:.1f}ms "
+            f"p99={un['p99_ms']:.1f}ms"),
+        row("serve_batched", ba["makespan_s"],
+            f"rps={ba['rps']:.0f} p50={ba['p50_ms']:.1f}ms "
+            f"p99={ba['p99_ms']:.1f}ms speedup={speedup:.2f}x "
+            f"avg_batch={ba['avg_batch']:.1f}"),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))
+
+EMLINT_WORKFLOWS = [lambda: make_decode_wf("lint-decode"),
+                    lambda: make_batch_wf("lint-batch")]   # emlint targets

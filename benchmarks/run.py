@@ -40,8 +40,12 @@
                                           distinct-interleaving coverage,
                                           dedup+POR payoff, ddmin
                                           minimization)
+  bench_serve            beyond-paper    (serving front door: open-loop
+                                          8-tenant decode load, batched
+                                          coalescer vs per-request
+                                          submissions; throughput + p99)
 
-Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_9.json`` next
+Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_10.json`` next
 to the repo root — per-bench wall clock, every CSV row, and each
 module's ``SUMMARY`` dict (bytes on the wire, speedups) — so future PRs
 have a perf baseline to regress against.
@@ -58,7 +62,7 @@ import sys
 import time
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                          os.pardir, "BENCH_9.json")
+                          os.pardir, "BENCH_10.json")
 
 
 def main() -> None:
@@ -66,11 +70,12 @@ def main() -> None:
                             bench_dataplane, bench_explore, bench_fabric,
                             bench_fanout, bench_lm_workflow, bench_locality,
                             bench_mdss, bench_obs, bench_parallel_offload,
-                            bench_partitioner, bench_runtime)
+                            bench_partitioner, bench_runtime, bench_serve)
     modules = [
         ("bench_analysis", bench_analysis),
         ("bench_explore", bench_explore),
         ("bench_fanout", bench_fanout),
+        ("bench_serve", bench_serve),
         ("bench_mdss", bench_mdss),
         ("bench_parallel_offload", bench_parallel_offload),
         ("bench_dag", bench_dag),
@@ -107,7 +112,7 @@ def main() -> None:
         print(f"# {name} done in {wall:.1f}s", file=sys.stderr)
     try:
         with open(BENCH_JSON, "w") as f:
-            json.dump({"bench_version": 9, "benches": report}, f, indent=2,
+            json.dump({"bench_version": 10, "benches": report}, f, indent=2,
                       sort_keys=True)
         print(f"# wrote {os.path.abspath(BENCH_JSON)}", file=sys.stderr)
     except OSError as e:  # pragma: no cover

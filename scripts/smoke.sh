@@ -28,7 +28,8 @@ python scripts/emlint.py --strict \
     benchmarks.bench_dag benchmarks.bench_runtime benchmarks.bench_locality \
     benchmarks.bench_dataplane benchmarks.bench_parallel_offload \
     benchmarks.bench_partitioner benchmarks.bench_mdss \
-    benchmarks.bench_analysis benchmarks.bench_fanout
+    benchmarks.bench_analysis benchmarks.bench_fanout \
+    benchmarks.bench_serve
 
 echo "== analysis bench (1k-step verify under its 100 ms budget) =="
 timeout 120 python -m benchmarks.bench_analysis
@@ -75,6 +76,21 @@ cmp "$REPRO_DIR/race1.json" "$REPRO_DIR/race2.json" \
 python scripts/emcheck.py --replay "$REPRO_DIR/race1.json" \
     || { echo "reproducer replay did not re-trigger the hazard"; exit 1; }
 echo "emcheck: planted race found, minimized, replayed byte-identically"
+
+echo "== emcheck front-door model (admission + preemption invariants) =="
+# the serving front-door model must exhaust its schedule space with zero
+# hazards (no parked-run starvation H125, no burned progress H126)...
+python scripts/emcheck.py --model frontdoor -q
+# ...and both planted defects must be found (lost-wakeup drain -> H125,
+# attempt-burning preemption -> H126)
+rc=0
+python scripts/emcheck.py --model frontdoor --bug parked_starved \
+    --max-schedules 500 --max-hazards 1 -q || rc=$?
+[ "$rc" -eq 1 ] || { echo "emcheck missed parked_starved (rc=$rc)"; exit 1; }
+rc=0
+python scripts/emcheck.py --model frontdoor --bug preempt_lost_step \
+    --max-schedules 500 --max-hazards 1 -q || rc=$?
+[ "$rc" -eq 1 ] || { echo "emcheck missed preempt_lost_step (rc=$rc)"; exit 1; }
 
 echo "== tier-1 tests (fast lane) =="
 python -m pytest -x -q -m "not slow"
@@ -236,6 +252,34 @@ assert warm * 4 <= cold, (
     f"incremental wire regression: warm re-run moved {warm} bytes vs "
     f"cold {cold}")
 print(f"# fanout smoke ok in {time.time() - t0:.1f}s")
+EOF
+
+echo "== serve smoke (front-door batching vs per-request submissions) =="
+SERVE_SMOKE=1 timeout 300 python - <<'EOF'
+import time
+from benchmarks import bench_serve
+
+t0 = time.time()
+un = bench_serve.run_arm(batched=False)
+ba = bench_serve.run_arm(batched=True)
+speedup = ba["rps"] / un["rps"]
+print(f"bench_serve: unbatched rps={un['rps']:.0f} p99={un['p99_ms']:.0f}ms "
+      f"| batched rps={ba['rps']:.0f} p99={ba['p99_ms']:.0f}ms "
+      f"speedup={speedup:.2f}x avg_batch={ba['avg_batch']:.1f}")
+# serve gate: with 8 interactive tenants on the same open-loop Poisson
+# schedule, the coalescing front door must deliver >= 2x the decode
+# throughput of per-request submissions (expected ~3.5-4x: the fused
+# dispatch pays the fixed per-dispatch cost once per ~20 requests)...
+assert speedup >= 2.0, (
+    f"front-door batching regression: {speedup:.2f}x < 2x "
+    f"(unbatched {un['rps']:.0f} rps, batched {ba['rps']:.0f} rps)")
+# ...at an interactive p99 no worse than the unbatched arm's (expected
+# ~5x better: queueing delay collapses once batches absorb the load;
+# 5 ms absolute slack absorbs timer jitter at these small windows)
+assert ba["p99_ms"] <= un["p99_ms"] + 5.0, (
+    f"front-door p99 regression: batched {ba['p99_ms']:.1f}ms vs "
+    f"unbatched {un['p99_ms']:.1f}ms")
+print(f"# serve smoke ok in {time.time() - t0:.1f}s")
 EOF
 
 echo "== dag smoke (event-driven executor vs critical-path bound) =="

@@ -36,7 +36,8 @@ Every explored trace replays through the PR 7 sanitizer (H101–H111)
 plus the cross-schedule invariants registered in ``findings.py``:
 H120 fence-epoch regression, H121 memo double-execution, H122
 fair-share starvation, H123 residency-budget overshoot, H124
-checkpoint/resume divergence. A hazard-triggering schedule is
+checkpoint/resume divergence, H125 parked-run starvation, H126
+preemption burning batch progress. A hazard-triggering schedule is
 delta-debugged (:func:`minimize`) to a 1-minimal decision list and
 serialized (:func:`save_reproducer`) for ``scripts/emcheck.py
 --replay``.
@@ -74,8 +75,14 @@ EMCHECK_VERSION = 1
 #:   ckpt_lost_step — the checkpoint freeze captures a step's outputs
 #:                    but not its completion bit (the PR 4-era freeze
 #:                    race), so resume re-applies it         -> H124
+#:   parked_starved — the admission drain runs only at submit time
+#:                    and misses the capacity-freed wakeup, so a
+#:                    parked run stays eligible forever      -> H125
+#:   preempt_lost_step — preemption burns a retry attempt and
+#:                    discards the newest checkpointed step  -> H126
 BUGS = ("duplicate_done", "stale_install", "memo_no_guard", "unfair",
-        "no_evict", "ckpt_lost_step")
+        "no_evict", "ckpt_lost_step", "parked_starved",
+        "preempt_lost_step")
 
 Schedule = List[str]
 
@@ -95,6 +102,8 @@ class Tenant:
     init: Dict[str, str] = field(default_factory=dict)   # uri -> value token
     budgets: Dict[str, int] = field(default_factory=dict)  # tier -> bytes
     resubmit: bool = False   # after completing, drop namespace + run again
+    park: bool = False       # submit into the admission queue (front door)
+    deadline: float = 0.0    # admission order key: oldest deadline first
 
 
 @dataclass
@@ -114,6 +123,8 @@ class SimModel:
     max_timeouts: int = 0
     max_preempts: int = 0
     starvation_window: int = 8
+    admit_capacity: int = 0   # >0: parked tenants drain through this many
+                              # concurrently-live admitted-run slots
     accum_steps: Set[str] = field(default_factory=set)
     bugs: Set[str] = field(default_factory=set)
     name: str = ""
@@ -295,17 +306,27 @@ class Simulation:
         self.memo_inflight: Dict[str, Tuple[str, str]] = {}
         self.executions: List[tuple] = []        # (key, run, step, t)
         self.dispatch_rounds: List[tuple] = []   # (chosen_run, owed tuple)
+        self.admission_rounds: List[tuple] = []  # (admitted tuple, eligible)
+        self.preempt_log: List[tuple] = []       # (run, step, d_attempts,
+                                                 #  ckpt_before, ckpt_after)
         self.pending: List[str] = []             # deferred install/ghost
         self.pending_installs: Dict[str, tuple] = {}  # decision -> payload
         self.schedule: Schedule = []
+        self.parked: List[str] = []       # park tenants awaiting admission
         for ten in model.tenants:
             run = _SimRun(ten)
             self.runs[ten.name] = run
             self.vtime[ten.name] = 0.0
+            if ten.park and model.admit_capacity:
+                self.parked.append(ten.name)
             for uri, token in ten.init.items():
                 full = f"{ten.name}/{uri}"
                 self.store.put(run, full, _digest("init", token), 1,
                                self.clock.now(), LOCAL)
+        # submit-time drain: both the clean model and the parked_starved
+        # bug admit whatever fits right now — the bug is that ONLY this
+        # drain ever runs (the capacity-freed wakeup is lost)
+        self._drain_admission()
         if preload:
             for name, (completed, digests) in preload.items():
                 run = self.runs[name]
@@ -336,12 +357,39 @@ class Simulation:
         out = []
         for name in sorted(self.runs):
             run = self.runs[name]
-            if run.failed:
+            if run.failed or name in self.parked:
                 continue
             for step in run.ready:
                 if run.lane_of(step) == lane:
                     out.append((name, step))
         return out
+
+    # ------------------------------------------------------------- admission
+    def _admission_eligible(self) -> List[str]:
+        """Parked runs the front door owes admission right now: free
+        admitted-run slots filled oldest-deadline-first (strict
+        head-of-queue, like the runtime's drain loop)."""
+        if not self.model.admit_capacity or not self.parked:
+            return []
+        live = sum(1 for n, r in self.runs.items()
+                   if r.tenant.park and n not in self.parked
+                   and not r.done())
+        free = self.model.admit_capacity - live
+        if free <= 0:
+            return []
+        order = sorted(self.parked,
+                       key=lambda n: (self.runs[n].tenant.deadline, n))
+        return order[:free]
+
+    def _drain_admission(self) -> List[str]:
+        admitted: List[str] = []
+        while True:
+            elig = self._admission_eligible()
+            if not elig:
+                return admitted
+            for n in elig:
+                self.parked.remove(n)
+                admitted.append(n)
 
     def _owed(self, cands: Sequence[Tuple[str, str]]) -> List[str]:
         """Runs the fair-share scheduler owes the next slot (minimal
@@ -418,6 +466,18 @@ class Simulation:
         kind = parts[0]
         handler = getattr(self, f"_do_{kind}")
         handler(parts[1:], t)
+        if self.model.admit_capacity:
+            # admission is deterministic, not a schedulable decision:
+            # the runtime's drain loop runs after every driver message,
+            # so the model drains eagerly after every decision. Under
+            # parked_starved only the submit-time drain ever ran, so
+            # capacity freed here is never noticed.
+            eligible = tuple(self._admission_eligible())
+            if "parked_starved" in self.model.bugs:
+                admitted: Tuple[str, ...] = ()
+            else:
+                admitted = tuple(self._drain_admission())
+            self.admission_rounds.append((admitted, eligible))
         self.store.sample_residency(t)
 
     def _do_dispatch(self, args: List[str], t: float):
@@ -535,7 +595,21 @@ class Simulation:
     def _do_preempt(self, args: List[str], t: float):
         name, step = args
         run = self.runs[name]
+        task = self.fabric.task(name, step)
+        before = task.attempts
+        ckpt_before = len(run.ckpt[0])
         self.fabric.preempt(name, step)
+        if "preempt_lost_step" in self.model.bugs:
+            # the checkpoint-abort bug: the requeue path charges the
+            # retry budget and the abort tears down the newest
+            # checkpointed step along with the in-flight one
+            task.attempts += 1
+            if run.ckpt[0]:
+                completed = set(run.ckpt[0])
+                completed.discard(max(completed))
+                run.ckpt = (frozenset(completed), dict(run.ckpt[1]))
+        self.preempt_log.append((name, step, task.attempts - before,
+                                 ckpt_before, len(run.ckpt[0])))
         self._emit(run, "retry", step, t, attempt=0)
 
     def _do_drop(self, args: List[str], t: float):
@@ -570,7 +644,8 @@ class Simulation:
         return (runs, vt, self.fabric.state_key(), self.store.state_key(),
                 tuple(self.pending),
                 tuple(sorted(self.memo_done)),
-                tuple(sorted(self.memo_inflight)))
+                tuple(sorted(self.memo_inflight)),
+                tuple(sorted(self.parked)))
 
     # --------------------------------------------------------------- output
     def run_states(self) -> Dict[str, str]:
@@ -599,6 +674,9 @@ class Simulation:
             "evictions": list(self.store.evictions),
             "executions": list(self.executions),
             "dispatch_rounds": list(self.dispatch_rounds),
+            "admission_rounds": list(self.admission_rounds),
+            "admission_window": self.model.starvation_window,
+            "preempt_log": list(self.preempt_log),
             "fair": self.model.fair,
             "starvation_window": self.model.starvation_window,
             "budgets": ten_budgets,
@@ -627,6 +705,11 @@ def check_trace(trace: dict) -> List[Finding]:
     if "dispatch_rounds" in trace:
         out += check_starvation(trace["dispatch_rounds"],
                                 trace.get("starvation_window", 8))
+    if "admission_rounds" in trace:
+        out += check_admission(trace["admission_rounds"],
+                               trace.get("admission_window", 8))
+    if "preempt_log" in trace:
+        out += check_preemption(trace["preempt_log"])
     if "residency" in trace:
         out += check_residency(trace.get("budgets", {}),
                                trace["residency"])
@@ -701,6 +784,56 @@ def check_starvation(dispatch_rounds: Iterable[tuple],
         for run in list(owed_streak):
             if run not in owed:
                 owed_streak[run] = 0
+    return out
+
+
+def check_admission(admission_rounds: Iterable[tuple],
+                    window: int) -> List[Finding]:
+    """H125: a parked run the front door owes admission (capacity free,
+    within the head of the deadline order) must be admitted within the
+    admission window of consecutive drain rounds — a longer streak
+    means a capacity-freed wakeup was lost."""
+    out: List[Finding] = []
+    streak: Dict[str, int] = {}
+    flagged: Set[str] = set()
+    for admitted, eligible in admission_rounds:
+        for run in eligible:
+            if run in admitted:
+                streak[run] = 0
+            else:
+                streak[run] = streak.get(run, 0) + 1
+                if streak[run] >= window and run not in flagged:
+                    flagged.add(run)
+                    out.append(finding(
+                        "H125",
+                        f"parked run {run!r} stayed admissible (free "
+                        f"slot, head of the deadline order) for "
+                        f"{streak[run]} consecutive drain rounds "
+                        f"without being admitted (window={window})"))
+        for run in list(streak):
+            if run not in eligible:
+                streak[run] = 0
+    return out
+
+
+def check_preemption(preempt_log: Iterable[tuple]) -> List[Finding]:
+    """H126: preemption must be attempt-free and checkpoint-preserving —
+    a preempted batch step may lose only its in-flight work, never
+    retry budget or already-checkpointed completions."""
+    out: List[Finding] = []
+    for run, step, d_attempts, ckpt_before, ckpt_after in preempt_log:
+        lost = []
+        if d_attempts > 0:
+            lost.append(f"burned {d_attempts} retry attempt(s)")
+        if ckpt_after < ckpt_before:
+            lost.append(f"dropped {ckpt_before - ckpt_after} "
+                        "checkpointed completion(s)")
+        if lost:
+            out.append(finding(
+                "H126",
+                f"preemption of {run}:{step} {' and '.join(lost)} — "
+                "SLO pressure is eating the batch tenant's progress",
+                steps=(step,)))
     return out
 
 
@@ -1190,6 +1323,21 @@ def model_ckpt_chain(*, bugs: Iterable[str] = ()) -> SimModel:
                     name="ckpt_chain", params={})
 
 
+def model_frontdoor(*, window: int = 4,
+                    bugs: Iterable[str] = ()) -> SimModel:
+    """The serving front door: two parked interactive tenants draining
+    oldest-deadline-first through one admitted-run slot while a batch
+    tenant's chain holds the lanes, with one spot preemption available
+    (H125 under ``parked_starved``, H126 under ``preempt_lost_step``)."""
+    return SimModel(
+        [Tenant("A", _wf_chain(1, prefix="a"), park=True, deadline=1.0),
+         Tenant("B", _wf_chain(1, prefix="b"), park=True, deadline=2.0),
+         Tenant("C", _wf_chain(3, prefix="bat"))],
+        offload_slots=2, local_slots=1, admit_capacity=1,
+        max_preempts=1, starvation_window=window, bugs=set(bugs),
+        name="frontdoor", params={"window": window})
+
+
 #: name -> builder; every builder accepts ``bugs=`` plus its own params,
 #: and stamps ``name``/``params`` so reproducers can rebuild it.
 MODELS: Dict[str, Callable[..., SimModel]] = {
@@ -1199,6 +1347,7 @@ MODELS: Dict[str, Callable[..., SimModel]] = {
     "budget": model_budget,
     "resubmit": model_resubmit,
     "ckpt_chain": model_ckpt_chain,
+    "frontdoor": model_frontdoor,
 }
 
 

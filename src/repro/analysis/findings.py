@@ -144,6 +144,16 @@ W063 = _rule("W063", ERROR, "fanout-sibling-ww",
              "sibling shards of one fan-out must write disjoint shard "
              "URIs; two shards writing the same uri#k race on the final "
              "version")
+W070 = _rule("W070", WARNING, "slo-unbatchable",
+             "slo_ms only steers the serving front door for remotable, "
+             "memoizable (deterministic, declared-inputs-only) steps the "
+             "coalescer can key by code fingerprint; drop the SLO or "
+             "make the step batchable")
+W071 = _rule("W071", ERROR, "preemptible-shard-no-gather",
+             "a preemptible fan-out shard can be checkpoint-aborted and "
+             "requeued; without the sibling gather barrier nothing "
+             "fences re-publication of its shard URI — add the gather "
+             "step or drop preemptible")
 
 # ---------------------------------------------------------------- sanitizer
 H101 = _rule("H101", ERROR, "duplicate-done",
@@ -188,6 +198,16 @@ H124 = _rule("H124", ERROR, "checkpoint-divergence",
              "final content digests than the uninterrupted run — the "
              "checkpoint froze an inconsistent (completed, vars) pair "
              "or resume re-applied a non-idempotent step")
+H125 = _rule("H125", ERROR, "parked-run-starved",
+             "a parked submission stayed eligible (capacity free, head "
+             "of the deadline order) for a full admission window without "
+             "being admitted — the drain loop missed the capacity-freed "
+             "wakeup; every slot release must re-run admission")
+H126 = _rule("H126", ERROR, "preempt-burned-progress",
+             "a preempted batch step lost retry budget or a completed "
+             "checkpoint step — preemption must be attempt-free and "
+             "resume from the latest checkpoint, else SLO pressure "
+             "silently eats batch tenants' work")
 
 # ---------------------------------------------------------------- selfcheck
 L001 = _rule("L001", ERROR, "unregistered-event-kind",

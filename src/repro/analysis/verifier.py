@@ -262,6 +262,23 @@ def verify(wf: Workflow, *, provided: Optional[Iterable[str]] = None,
                     f"memoizable step {s.name} declares no outputs, so "
                     "no execution is ever memoized",
                     steps=(s.name,), where=s.defined_at))
+        if getattr(s, "slo_ms", None) is not None:
+            # the coalescer keys fused batches on (code fingerprint,
+            # shape) — only remotable, deterministic-by-declaration
+            # steps can safely fuse across tenants
+            why = []
+            if not s.remotable:
+                why.append("is not remotable")
+            if s.memoizable is False:
+                why.append("is declared memoizable=False (not "
+                           "deterministic over its declared inputs)")
+            if why:
+                out.append(finding(
+                    F.W070,
+                    f"step {s.name} carries slo_ms={s.slo_ms} but "
+                    f"{' and '.join(why)} — the serving front door "
+                    "cannot coalesce it, so the SLO steers nothing",
+                    steps=(s.name,), where=s.defined_at))
 
     # ------------------------------------------- W010/W011/W012 races
     for v, ws in writers.items():
@@ -362,6 +379,8 @@ def _fanout_findings(wf: Workflow, top: List[Step]) -> List[Finding]:
     from repro.core.partitioner import _fanout_spec_errors
     out: List[Finding] = []
     shard_writers: Dict[str, Dict[str, str]] = {}   # parent -> uri -> shard
+    preemptible_shards: Dict[str, List[str]] = {}   # parent -> shard names
+    gather_parents: Set[str] = set()
     for s in top:
         spec = s.fanout
         if spec is not None and not s.fanout_role:
@@ -384,6 +403,11 @@ def _fanout_findings(wf: Workflow, top: List[Step]) -> List[Finding]:
                         f"step {s.name}'s {label} {reason}; fabric "
                         "workers and checkpoints cannot carry it",
                         steps=(s.name,), where=s.defined_at))
+        if s.fanout_role == "gather":
+            gather_parents.add(s.fanout_parent)
+        if s.fanout_role == "shard" and getattr(s, "preemptible", False):
+            preemptible_shards.setdefault(
+                s.fanout_parent, []).append(s.name)
         if s.fanout_role == "gather" and s.fanout_shards > 0:
             expected = {shard_uri(o, k)
                         for o in s.outputs for k in range(s.fanout_shards)}
@@ -409,6 +433,15 @@ def _fanout_findings(wf: Workflow, top: List[Step]) -> List[Finding]:
                         where=s.defined_at))
                 else:
                     seen[o] = s.name
+    for parent, shards in sorted(preemptible_shards.items()):
+        if parent not in gather_parents:
+            out.append(finding(
+                F.W071,
+                f"preemptible shard(s) {', '.join(sorted(shards))} of "
+                f"fan-out {parent} have no sibling gather step — a "
+                "preempted-and-requeued shard would re-publish its "
+                "shard URI with no barrier fencing downstream readers",
+                steps=tuple(sorted(shards)), uri=parent))
     return out
 
 

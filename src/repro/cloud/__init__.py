@@ -82,13 +82,16 @@ class Fabric:
         # trace_ctx: (trace_id, span_id) of the driver-side span — rides
         # the task frame header so the worker's recv/exec/send phases
         # come back as child spans (see broker/worker)
+        preemptible = bool(getattr(step, "preemptible", False))
         if getattr(step, "remote_impl", None):
             return self.broker.submit(step=step.remote_impl, kwargs=kwargs,
                                       max_attempts=max_attempts,
-                                      priority=priority, trace_ctx=trace_ctx)
+                                      priority=priority, trace_ctx=trace_ctx,
+                                      preemptible=preemptible)
         return self.broker.submit(fn_bytes=pickle.dumps(step.fn),
                                   kwargs=kwargs, max_attempts=max_attempts,
-                                  priority=priority, trace_ctx=trace_ctx)
+                                  priority=priority, trace_ctx=trace_ctx,
+                                  preemptible=preemptible)
 
     def ship(self, value, timeout: Optional[float] = 60.0) -> Task:
         return self.broker.ship(value, timeout=timeout)

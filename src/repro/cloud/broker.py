@@ -75,6 +75,11 @@ class Task:
                                     # the wire; worker phases parent to it
     max_attempts: int = 3
     attempts: int = 0               # placements so far
+    # the serving front door may checkpoint-abort this task in flight
+    # (worker killed, task requeued attempt-free) to protect an
+    # interactive tenant's SLO; only long batch steps should opt in
+    preemptible: bool = False
+    preempted: int = 0              # times aborted-and-requeued for SLO
     exclude: Set[str] = field(default_factory=set)
     future: Future = field(default_factory=Future)
     # filled in by dispatch/completion
@@ -134,6 +139,7 @@ class Broker:
         self.tasks_done = 0
         self.tasks_requeued = 0
         self.tasks_cancelled = 0
+        self.tasks_preempted = 0
         self.workers_lost = 0
         self.warm_hits = 0
         self.bytes_sent = 0
@@ -156,7 +162,7 @@ class Broker:
                fn_bytes: Optional[bytes] = None, kwargs: Optional[dict] = None,
                value: Any = None, kind: str = "task",
                max_attempts: Optional[int] = None, priority: int = 0,
-               trace_ctx=None) -> Task:
+               trace_ctx=None, preemptible: bool = False) -> Task:
         if kind == "task" and not step and fn_bytes is None:
             raise FabricError("task needs a registry step name or fn_bytes")
         with self._cond:
@@ -165,7 +171,7 @@ class Broker:
             self._task_counter += 1
             t = Task(self._task_counter, kind, step=step, fn_bytes=fn_bytes,
                      kwargs=kwargs, value=value, priority=priority,
-                     trace_ctx=trace_ctx,
+                     trace_ctx=trace_ctx, preemptible=preemptible,
                      max_attempts=max_attempts or self.max_attempts)
             self._queue.append(t)
             self._cond.notify_all()
@@ -208,6 +214,45 @@ class Broker:
         task.future.set_exception(
             FabricError(f"task {task.task_id} cancelled"))
         return True
+
+    def preempt_longest(self) -> Optional[Task]:
+        """Checkpoint-abort the longest-running preemptible in-flight
+        task: its worker is killed (the spot-reclaim shape the requeue
+        machinery already survives) and the task returns to the **front**
+        of the queue with its placement attempt refunded — preemption is
+        an SLO decision, not a task failure, so it must never consume the
+        retry budget (H126). Returns the preempted task, or None when
+        nothing in flight is preemptible."""
+        with self._cond:
+            victims = [(wid, t) for wid, t in self._inflight.items()
+                       if t.preemptible and t.kind == "task"]
+            if not victims:
+                return None
+            wid, task = min(victims, key=lambda wt: wt[1]._send_t)
+            h = self._workers.get(wid)
+            if h is None:
+                return None
+            # take the worker out of the tables here so the reader
+            # thread's exit path (_on_worker_death) early-returns instead
+            # of double-requeueing the task or burning its attempt
+            h.state = "dead"
+            del self._workers[wid]
+            del self._inflight[wid]
+            task.attempts -= 1          # refund the dispatch-time burn
+            task.preempted += 1
+            task.exclude.discard(wid)
+            self.tasks_preempted += 1
+            self.tasks_requeued += 1
+            self._queue.insert(0, task)
+            replace = self.replace_dead and not self._closed
+            self._cond.notify_all()
+        self.pool.kill(h)
+        if replace:
+            try:
+                self.add_worker()
+            except Exception:
+                pass   # pool closed mid-shutdown
+        return task
 
     # -------------------------------------------------------------- workers
     def add_worker(self) -> str:
@@ -326,6 +371,8 @@ class Broker:
         registry.gauge("broker.tasks_requeued", lambda: self.tasks_requeued)
         registry.gauge("broker.tasks_cancelled",
                        lambda: self.tasks_cancelled)
+        registry.gauge("broker.tasks_preempted",
+                       lambda: self.tasks_preempted)
         registry.gauge("broker.workers_lost", lambda: self.workers_lost)
         registry.gauge("broker.warm_hits", lambda: self.warm_hits)
         registry.gauge("wire.bytes_sent", lambda: self.bytes_sent)

@@ -227,6 +227,10 @@ class RunHandle:
         self._done = threading.Event()
         self._result: Optional[dict] = None
         self._error: Optional[BaseException] = None
+        # True while the submission sits in the front door's admission
+        # queue (submit(park=True) under capacity pressure); cleared by
+        # the drain loop when the run is admitted
+        self._parked = False
         # set (at most once, BEFORE the run is enqueued) by the runtime:
         # fires on any terminal state — result, failure, cancel
         self._on_done = None
@@ -264,12 +268,15 @@ class RunHandle:
         un-namespaced (compat shim) runs."""
         if not self.namespace:
             return (0, 0)
-        return self._runtime.mdss.drop_namespace(self.namespace)
+        out = self._runtime.mdss.drop_namespace(self.namespace)
+        # freed residency may admit a parked run right now
+        self._runtime._nudge()
+        return out
 
     @property
     def state(self) -> str:
         if not self._done.is_set():
-            return "running"
+            return "parked" if self._parked else "running"
         if isinstance(self._error, RunCancelled):
             return "cancelled"
         return "failed" if self._error is not None else "done"
@@ -332,12 +339,66 @@ class _Run:
     # gather completes. fanout_t0 holds the matching wall start.
     fanout_ctx: Dict[str, Any] = field(default_factory=dict)
     fanout_t0: Dict[str, float] = field(default_factory=dict)
+    # serving-front-door state: an absolute perf_counter deadline plus a
+    # per-run SLO (ms). When the deadline's slack shrinks below the SLO
+    # while ready work is still waiting for a lane, the driver preempts
+    # the longest-running preemptible batch task (once per run).
+    slo_ms: Optional[float] = None
+    deadline_perf: Optional[float] = None
+    preempt_fired: bool = False
+    # seconds this run waited parked; credited as a fair-share deficit at
+    # admission so near-SLO latecomers overtake long-resident tenants
+    admit_credit: float = 0.0
 
     def emit(self, kind, step, tier="", **info):
         t = time.perf_counter()
         with self.lock:
             self.events.append(Event(kind, step, tier, t, info,
                                      self.epoch_wall + (t - self.epoch_perf)))
+
+
+@dataclass
+class _Parked:
+    """One submission waiting in the front door's admission queue.
+
+    Everything ``_materialize`` needs to turn it into a live ``_Run`` is
+    carried here verbatim from ``submit``; validation already ran at park
+    time (a rejected workflow is refused immediately, it never parks),
+    and NO runtime state — reservations, namespace budgets, init_vars —
+    lands until admission, so cancelling or failing a parked entry needs
+    no rollback (the symmetric-release contract the admission paths
+    share)."""
+    handle: RunHandle
+    pwf: PartitionedWorkflow
+    wf: Workflow
+    run_id: str
+    ns: str
+    mdss: Any
+    init_vars: Optional[Dict[str, Any]]
+    residency_budget: Optional[Dict[str, int]]
+    declared: int
+    policy: Optional[str]
+    fetch: Any
+    resume: bool
+    weight: float
+    priority: int
+    speculate_after: Any
+    prefetch: Optional[bool]
+    checkpointer: Optional[RunCheckpointer]
+    reason: str                     # capacity | budget | run_slots
+    seq: int                        # FIFO tiebreak among equal deadlines
+    parked_t: float                 # perf_counter at park time
+    slo_ms: Optional[float] = None
+    deadline_perf: Optional[float] = None
+    preempt_fired: bool = False
+
+
+def _park_order(p: _Parked) -> tuple:
+    """Drain order: oldest (smallest) absolute deadline first, then FIFO.
+    Strict head-of-queue admission — a later small run never bypasses the
+    head (that bypass is exactly the H125 starvation shape)."""
+    return (p.deadline_perf if p.deadline_perf is not None else float("inf"),
+            p.seq)
 
 
 _AUTO = object()
@@ -357,6 +418,8 @@ class EmeraldRuntime:
                  checkpoint_dir: Optional[str] = None, prefetch: bool = True,
                  shared_namespace: str = "shared", name: str = "emerald",
                  admission_headroom: float = 0.9,
+                 park_limit: int = 64,
+                 max_active_runs: Optional[int] = None,
                  memoize: Optional[bool] = None,
                  telemetry: bool = True,
                  tracer: Optional[Tracer] = None,
@@ -390,6 +453,21 @@ class EmeraldRuntime:
         self.shared_namespace = shared_namespace
         self.name = name
         self.admission_headroom = admission_headroom
+        # serving front door: the bounded admission (parking) queue.
+        # submit(park=True) parks instead of raising AdmissionRefused
+        # when capacity is tight; the driver drains it oldest-deadline-
+        # first as capacity frees. queue_full is the only hard refusal.
+        self.park_limit = park_limit
+        # optional cap on concurrently admitted runs (the "lane
+        # capacity" admission signal — None = unbounded, the pre-front-
+        # door behaviour); counted by _live under _runs_lock
+        self.max_active_runs = max_active_runs
+        self._parked: List[_Parked] = []         # guarded by _runs_lock
+        self._park_seq = itertools.count(1)
+        self._live = 0                           # admitted, unfinalized runs
+        self.parked_total = 0
+        self.admitted_total = 0
+        self._coalescers: List[Any] = []         # introspection attach point
         if memoize is not None:
             # cross-run step memoization (manager-wide): two tenants
             # submitting identical step code over content-identical
@@ -432,6 +510,9 @@ class EmeraldRuntime:
         m.gauge("runtime.lane_busy.local", lambda: self._busy[False])
         m.gauge("runtime.runs_completed", lambda: self.runs_completed)
         m.gauge("scheduler.fair_share", self._fair.shares)
+        m.gauge("frontdoor.parked_depth", lambda: len(self._parked))
+        m.gauge("frontdoor.parked_total", lambda: self.parked_total)
+        m.gauge("frontdoor.admitted_total", lambda: self.admitted_total)
 
         self._offload_pool = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix=f"{name}-offload")
@@ -460,7 +541,9 @@ class EmeraldRuntime:
                speculate_after=_AUTO, prefetch: Optional[bool] = None,
                checkpointer: Optional[RunCheckpointer] = None,
                events: Optional[List[Event]] = None,
-               on_done=None, validate: str = "error") -> RunHandle:
+               on_done=None, validate: str = "error",
+               park: bool = False, deadline_s: Optional[float] = None,
+               slo_ms: Optional[float] = None) -> RunHandle:
         """Enqueue a workflow for concurrent execution (non-blocking).
 
         ``workflow`` may be a :class:`Workflow` (partitioned here) or an
@@ -488,14 +571,28 @@ class EmeraldRuntime:
         records every finding on ``handle.findings`` (plus a
         ``UserWarning`` when errors were found), ``"off"`` skips the
         pass. Warnings/infos never block in any mode.
+
+        ``park=True`` turns every capacity refusal into a *parked*
+        submission instead: the handle returns immediately in state
+        ``"parked"`` and the driver's drain loop admits it (oldest
+        ``deadline_s`` first, FIFO within equal deadlines) once
+        residency reservations and run slots free up. A full parking
+        queue (``park_limit``) is then the only hard refusal. ``slo_ms``
+        arms SLO protection: when a parked (or admitted, lane-starved)
+        interactive run's deadline slack shrinks below its SLO, the
+        driver checkpoint-aborts the longest-running preemptible batch
+        task so the decode path holds its p99.
         """
         if self._closed:
             raise RuntimeClosed("runtime is closed")
+        park_reason = None
         if self.mdss.over_capacity(self.admission_headroom):
-            raise AdmissionRefused(
-                f"shared store holds {self.mdss.resident_bytes()} of "
-                f"{self.mdss.capacity_bytes} capacity bytes (headroom "
-                f"{self.admission_headroom:.0%}): submission refused")
+            if not park:
+                raise AdmissionRefused(
+                    f"shared store holds {self.mdss.resident_bytes()} of "
+                    f"{self.mdss.capacity_bytes} capacity bytes (headroom "
+                    f"{self.admission_headroom:.0%}): submission refused")
+            park_reason = "capacity"
         if resume and namespace is None:
             # a fresh auto namespace has no prior state OR checkpoint to
             # resume from — silently re-running the whole DAG (including
@@ -517,9 +614,19 @@ class EmeraldRuntime:
                 "residency_budget needs a namespaced run (an "
                 "un-namespaced submission shares the base store)")
         declared = sum(residency_budget.values()) if residency_budget else 0
-        if declared and self.mdss.capacity_bytes:
-            limit = self.admission_headroom * self.mdss.capacity_bytes
-            with self._runs_lock:
+        deadline_perf = None if deadline_s is None \
+            else time.perf_counter() + deadline_s
+        limit = self.admission_headroom * self.mdss.capacity_bytes \
+            if declared and self.mdss.capacity_bytes else None
+        with self._runs_lock:
+            if self.max_active_runs is not None \
+                    and self._live >= self.max_active_runs:
+                if not park:
+                    raise AdmissionRefused(
+                        f"{self._live} of {self.max_active_runs} run slots "
+                        "busy: submission refused")
+                park_reason = park_reason or "run_slots"
+            if limit is not None and park_reason is None:
                 # check + reserve atomically: two concurrent submits that
                 # each fit alone but not together must not both pass. An
                 # admitted run's unfilled declared budget is capacity it
@@ -529,28 +636,96 @@ class EmeraldRuntime:
                     for rns, decl in self._reserved.values())
                 committed = self.mdss.resident_bytes() + reserved
                 if committed + declared > limit:
-                    raise AdmissionRefused(
-                        f"declared residency budget {declared} does not fit "
-                        f"remaining capacity ({committed} of {limit:.0f} "
-                        "already committed by residency + admitted budgets)")
-                self._reserved[run_id] = (ns, declared)
+                    if not park:
+                        raise AdmissionRefused(
+                            f"declared residency budget {declared} does not "
+                            f"fit remaining capacity ({committed} of "
+                            f"{limit:.0f} already committed by residency + "
+                            "admitted budgets)")
+                    park_reason = "budget"
+            if park_reason is None:
+                if limit is not None:
+                    self._reserved[run_id] = (ns, declared)
+                self._live += 1
+        if park_reason is not None:
+            return self._park(
+                pwf, wf, run_id, ns, mdss, init_vars, residency_budget,
+                declared, policy, fetch, resume, weight, priority,
+                speculate_after, prefetch, checkpointer, events, on_done,
+                validate, park_reason, deadline_s, deadline_perf, slo_ms)
         try:
             return self._submit_admitted(
                 pwf, wf, run_id, ns, mdss, init_vars, residency_budget,
                 policy, fetch, resume, weight, priority, speculate_after,
-                prefetch, checkpointer, events, on_done, validate)
+                prefetch, checkpointer, events, on_done, validate,
+                slo_ms=slo_ms, deadline_perf=deadline_perf)
         except BaseException:
             # anything that fails between admission and the driver taking
             # ownership must release the reservation — a leak here would
-            # shrink admission capacity forever
+            # shrink admission capacity forever. The run-slot count
+            # releases symmetrically (same lock, same path) so a rejected
+            # submission can never wedge the front door shut.
             with self._runs_lock:
                 self._reserved.pop(run_id, None)
+                self._live -= 1
             raise
+
+    def _park(self, pwf, wf, run_id, ns, mdss, init_vars, residency_budget,
+              declared, policy, fetch, resume, weight, priority,
+              speculate_after, prefetch, checkpointer, events, on_done,
+              validate, reason, deadline_s, deadline_perf, slo_ms
+              ) -> RunHandle:
+        """Park a submission the capacity checks refused. Validation runs
+        FIRST — before the entry lands anywhere — so a rejected workflow
+        is refused outright and a parked entry needs no rollback ever:
+        no reservation, namespace budget, or init_vars put exists until
+        the drain loop admits it."""
+        findings = self._validate_submission(
+            wf, mdss, init_vars, residency_budget, resume, validate)
+        sink = events if events is not None else []
+        handle = RunHandle(run_id, ns, self, sink)
+        handle.findings = findings
+        handle._on_done = on_done
+        handle.trace_id = run_id
+        handle._parked = True
+        entry = _Parked(
+            handle=handle, pwf=pwf, wf=wf, run_id=run_id, ns=ns, mdss=mdss,
+            init_vars=init_vars, residency_budget=residency_budget,
+            declared=declared, policy=policy, fetch=fetch, resume=resume,
+            weight=weight, priority=priority, speculate_after=speculate_after,
+            prefetch=prefetch, checkpointer=checkpointer, reason=reason,
+            seq=next(self._park_seq), parked_t=time.perf_counter(),
+            slo_ms=slo_ms, deadline_perf=deadline_perf)
+        with self._runs_lock:
+            if len(self._parked) >= self.park_limit:
+                self.metrics.inc("frontdoor.queue_full")
+                raise AdmissionRefused(
+                    f"queue_full: admission queue holds {len(self._parked)} "
+                    f"of {self.park_limit} parked submissions")
+            self._parked.append(entry)
+            depth = len(self._parked)
+            self.parked_total += 1
+        info = {"reason": reason, "depth": depth}
+        if deadline_s is not None:
+            info["deadline_s"] = deadline_s
+        if slo_ms is not None:
+            info["slo_ms"] = slo_ms
+        t = time.perf_counter()
+        sink.append(Event("park", "<workflow>", "", t, info, time.time()))
+        # wake the driver for an immediate drain attempt (capacity may
+        # already suffice — e.g. park under run-slot pressure that a
+        # finalize just relieved)
+        self._nudge()
+        if self._closed and not self._driver.is_alive():
+            # close() fully raced this park: nobody will ever drain it
+            self._fail_parked(RuntimeClosed("runtime closed"))
+        return handle
 
     def _submit_admitted(self, pwf, wf, run_id, ns, mdss, init_vars,
                          residency_budget, policy, fetch, resume, weight,
                          priority, speculate_after, prefetch, checkpointer,
-                         events, on_done, validate="error") -> RunHandle:
+                         events, on_done, validate="error", slo_ms=None,
+                         deadline_perf=None) -> RunHandle:
         if residency_budget:
             for tier_name, max_bytes in residency_budget.items():
                 self.mdss.set_namespace_budget(ns, tier_name, max_bytes)
@@ -564,7 +739,22 @@ class EmeraldRuntime:
             for tier_name in (residency_budget or ()):
                 self.mdss.set_namespace_budget(ns, tier_name, None)
             raise
+        sink = events if events is not None else []
+        handle = RunHandle(run_id, ns, self, sink)
+        handle.findings = findings
+        # installed before the run can possibly finalize — no TOCTOU
+        handle._on_done = on_done
+        handle.trace_id = run_id
+        self._materialize(pwf, wf, run_id, ns, mdss, init_vars, resume,
+                          policy, fetch, weight, priority, speculate_after,
+                          prefetch, checkpointer, handle, sink, slo_ms,
+                          deadline_perf)
+        return handle
 
+    def _materialize(self, pwf, wf, run_id, ns, mdss, init_vars, resume,
+                     policy, fetch, weight, priority, speculate_after,
+                     prefetch, checkpointer, handle, sink, slo_ms,
+                     deadline_perf) -> "_Run":
         completed: set = set()
         for uri, val in (init_vars or {}).items():
             if uri not in wf.variables:
@@ -609,14 +799,8 @@ class EmeraldRuntime:
             run_policy.set_priorities(critical_path_lengths(
                 wf, self.manager.cost_model, self.cloud_tier, succ=succs))
 
-        sink = events if events is not None else []
-        handle = RunHandle(run_id, ns, self, sink)
-        handle.findings = findings
-        # installed before the run can possibly finalize — no TOCTOU
-        handle._on_done = on_done
         # one trace per run: the root "run" span's identity is allocated
         # now (so every child can parent to it) and recorded at finalize
-        handle.trace_id = run_id
         root_ctx = (run_id, self.tracer.next_id()) \
             if self.tracer.enabled else None
         run = _Run(run_id=run_id, ns=ns, handle=handle, wf=wf, steps=steps,
@@ -627,7 +811,8 @@ class EmeraldRuntime:
                    speculate_after=self.speculate_after
                    if speculate_after is _AUTO else speculate_after,
                    prefetch=self.prefetch if prefetch is None else prefetch,
-                   events=sink, root_ctx=root_ctx)
+                   events=sink, root_ctx=root_ctx, slo_ms=slo_ms,
+                   deadline_perf=deadline_perf)
         handle.epoch_wall = run.epoch_wall
         if checkpointer is not None:
             checkpointer._emit = run.emit
@@ -637,7 +822,7 @@ class EmeraldRuntime:
         # flush it ourselves — the handle resolves instead of hanging
         if self._closed and not self._driver.is_alive():
             self._flush_orphaned_inbox()
-        return handle
+        return run
 
     def _validate_submission(self, wf, mdss, init_vars, residency_budget,
                              resume, validate):
@@ -675,6 +860,141 @@ class EmeraldRuntime:
                 + "; ".join(f"{f.rule} {f.message}" for f in errors),
                 stacklevel=3)
         return findings
+
+    # ------------------------------------------------------ admission queue
+    def _nudge(self):
+        """Wake the driver for a drain attempt (freed residency or a
+        released namespace can admit parked runs). Safe from any thread;
+        a dead driver ignores it via the orphan flush."""
+        if not self._closed and self._driver.is_alive():
+            self._inbox.put(("nudge",))
+
+    def _fits_locked(self, declared: int) -> bool:
+        """Would a submission with ``declared`` budget bytes be admitted
+        right now? Caller holds ``_runs_lock`` (same atomic
+        check-then-reserve discipline as ``submit``)."""
+        if self.max_active_runs is not None \
+                and self._live >= self.max_active_runs:
+            return False
+        if self.mdss.over_capacity(self.admission_headroom):
+            return False
+        if declared and self.mdss.capacity_bytes:
+            limit = self.admission_headroom * self.mdss.capacity_bytes
+            reserved = sum(
+                max(0, decl - self.mdss.namespace_resident_bytes(rns))
+                for rns, decl in self._reserved.values())
+            if self.mdss.resident_bytes() + reserved + declared > limit:
+                return False
+        return True
+
+    def _drain_parked(self):
+        """Driver-side: admit parked submissions oldest-deadline-first
+        while the head fits. Strictly head-of-queue — when the head does
+        not fit, nothing behind it is considered (a smaller latecomer
+        bypassing the head is the H125 starvation hazard)."""
+        if self._draining:
+            return
+        while True:
+            with self._runs_lock:
+                if not self._parked:
+                    return
+                p = min(self._parked, key=_park_order)
+                if not self._fits_locked(p.declared):
+                    return
+                self._parked.remove(p)
+                if p.declared and self.mdss.capacity_bytes:
+                    self._reserved[p.run_id] = (p.ns, p.declared)
+                self._live += 1
+                depth = len(self._parked)
+            try:
+                self._admit_parked(p, depth)
+            except BaseException as e:
+                # symmetric release: an admission that fails mid-flight
+                # must return its reservation + run slot, exactly like
+                # the direct-submit reject path
+                with self._runs_lock:
+                    self._reserved.pop(p.run_id, None)
+                    self._live -= 1
+                p.handle._parked = False
+                p.handle._finish(error=e)
+
+    def _admit_parked(self, p: _Parked, depth: int):
+        """Turn one parked entry into a live run (driver thread)."""
+        if p.residency_budget:
+            for tier_name, max_bytes in p.residency_budget.items():
+                self.mdss.set_namespace_budget(p.ns, tier_name, max_bytes)
+        waited = time.perf_counter() - p.parked_t
+        try:
+            run = self._materialize(
+                p.pwf, p.wf, p.run_id, p.ns, p.mdss, p.init_vars, p.resume,
+                p.policy, p.fetch, p.weight, p.priority, p.speculate_after,
+                p.prefetch, p.checkpointer, p.handle, p.handle.events,
+                p.slo_ms, p.deadline_perf)
+        except BaseException:
+            for tier_name in (p.residency_budget or ()):
+                self.mdss.set_namespace_budget(p.ns, tier_name, None)
+            raise
+        run.preempt_fired = p.preempt_fired
+        # waited seconds become a fair-share deficit credit when the
+        # driver processes the submit message — a near-SLO latecomer
+        # overtakes tenants that were running while it was parked
+        run.admit_credit = waited
+        p.handle._parked = False
+        self.admitted_total += 1
+        self.metrics.inc("frontdoor.admitted_total")
+        self.metrics.observe("frontdoor.park_wait_s", waited)
+        info = {"waited_s": waited, "depth": depth}
+        if p.deadline_perf is not None:
+            info["slack_s"] = p.deadline_perf - time.perf_counter()
+        run.emit("admit", "<workflow>", **info)
+
+    def _fail_parked(self, err: BaseException):
+        """Fail every parked entry (shutdown paths). Idempotent and
+        thread-safe; parked entries hold no runtime state to roll back."""
+        with self._runs_lock:
+            doomed, self._parked = self._parked, []
+        for p in doomed:
+            p.handle._parked = False
+            p.handle._finish(error=err)
+
+    def _check_slo(self):
+        """Driver-side SLO guard: when an interactive run's deadline
+        slack shrinks below its SLO while it is still parked — or
+        admitted but lane-starved — checkpoint-abort the longest-running
+        preemptible batch task on the fabric (requeued attempt-free) so
+        a worker frees up. At most one preemption per run."""
+        if self._draining:
+            return
+        broker = getattr(self._fabric, "broker", None)
+        if broker is None or not hasattr(broker, "preempt_longest"):
+            return
+        now = time.perf_counter()
+        threatened: List[Any] = []
+        with self._runs_lock:
+            for p in self._parked:
+                if p.deadline_perf is None or p.preempt_fired:
+                    continue
+                if p.deadline_perf - now <= (p.slo_ms or 0.0) / 1000.0:
+                    p.preempt_fired = True
+                    threatened.append((p.handle.events, p.deadline_perf))
+        for run in self._runs.values():
+            if run.deadline_perf is None or run.preempt_fired:
+                continue
+            if not run.ready[True] and not run.ready[False]:
+                continue        # nothing waiting on a lane
+            if run.deadline_perf - now <= (run.slo_ms or 0.0) / 1000.0:
+                run.preempt_fired = True
+                threatened.append((run.events, run.deadline_perf))
+        for sink, deadline in threatened:
+            task = broker.preempt_longest()
+            if task is None:
+                return          # nothing preemptible in flight
+            self.metrics.inc("frontdoor.preemptions")
+            t = time.perf_counter()
+            sink.append(Event(
+                "preempt", "<workflow>", "", t,
+                {"victim": f"task{task.task_id}", "step": task.step or "",
+                 "slack_s": deadline - now}, time.time()))
 
     def publish(self, uri: str, value, tier: str = "local") -> int:
         """Write warm cross-run data into the shared namespace: every
@@ -762,9 +1082,24 @@ class EmeraldRuntime:
         # mutates, so this is exact; on a wedged driver it is best-effort.
         return self._introspect_unsafe()
 
+    def attach_coalescer(self, coalescer) -> None:
+        """Register a :class:`~repro.core.batching.BatchCoalescer` so its
+        live bucket occupancy shows up under ``introspect()['frontdoor']``
+        (and in emtop's FRONTDOOR panel)."""
+        self._coalescers.append(coalescer)
+
     def _introspect_unsafe(self) -> dict:
+        now = time.perf_counter()
         with self._runs_lock:
             runs = list(self._runs.values())
+            parked_rows = [{
+                "run_id": p.run_id,
+                "reason": p.reason,
+                "waited_s": now - p.parked_t,
+                "slack_s": (p.deadline_perf - now)
+                if p.deadline_perf is not None else None,
+                "slo_ms": p.slo_ms,
+            } for p in sorted(self._parked, key=_park_order)]
         run_rows = []
         for run in runs:
             states = {nm: "pending" for nm in run.steps}
@@ -815,6 +1150,16 @@ class EmeraldRuntime:
                           "slots": self._slots[False]},
             },
             "runs": run_rows,
+            "frontdoor": {
+                "depth": len(parked_rows),
+                "queue_limit": self.park_limit,
+                "parked": parked_rows,
+                "oldest_wait_s": max(
+                    (r["waited_s"] for r in parked_rows), default=0.0),
+                "parked_total": self.parked_total,
+                "admitted_total": self.admitted_total,
+                "coalescers": [c.introspect() for c in self._coalescers],
+            },
             "fair_share": self._fair.shares(),
             "mdss": self.mdss.introspect(),
             "memo": self.manager.memo_stats(),
@@ -861,6 +1206,9 @@ class EmeraldRuntime:
         self._inbox.put(("stop",))
         self._driver.join(timeout=timeout)
         self._flush_orphaned_inbox()
+        # entries parked after the driver processed "stop" (or left
+        # behind by a timed-out join) must still resolve
+        self._fail_parked(RuntimeClosed("runtime closed"))
         self._offload_pool.shutdown(wait=True)
         self._local_pool.shutdown(wait=True)
         self._misc_pool.shutdown(wait=True)
@@ -885,6 +1233,7 @@ class EmeraldRuntime:
             if msg[0] == "submit":
                 with self._runs_lock:
                     self._reserved.pop(getattr(msg[1], "run_id", None), None)
+                    self._live -= 1
                 msg[1].handle._finish(error=RuntimeClosed("runtime closed"))
             elif msg[0] == "introspect":
                 # answer directly so a caller racing close() never hangs
@@ -919,6 +1268,7 @@ class EmeraldRuntime:
         touched: List[_Run] = []
         if kind == "stop":
             self._draining = True
+            self._fail_parked(RuntimeClosed("runtime closed"))
             for run in list(self._runs.values()):
                 run.ready = {True: [], False: []}
                 touched.append(run)
@@ -927,11 +1277,17 @@ class EmeraldRuntime:
             if self._draining:
                 with self._runs_lock:
                     self._reserved.pop(run.run_id, None)
+                    self._live -= 1
                 run.handle._finish(error=RuntimeClosed("runtime closed"))
                 return False
             with self._runs_lock:
                 self._runs[run.run_id] = run
             self._fair.add(run.run_id, run.weight)
+            if run.admit_credit:
+                # the park wait becomes deficit: vtime drops below the
+                # field, so the admitted run is picked first until the
+                # credit is consumed
+                self._fair.charge(run.run_id, -run.admit_credit)
             for nm, d in run.indeg.items():
                 if d == 0:
                     self._push_ready(run, nm)
@@ -955,6 +1311,19 @@ class EmeraldRuntime:
                 run.cancelled = True
                 run.ready = {True: [], False: []}
                 touched.append(run)
+            elif run is None:
+                # a parked submission cancels cleanly: it holds no
+                # reservation or namespace state, so removal IS the
+                # whole rollback
+                with self._runs_lock:
+                    p = next((q for q in self._parked
+                              if q.run_id == msg[1]), None)
+                    if p is not None:
+                        self._parked.remove(p)
+                if p is not None:
+                    p.handle._parked = False
+                    p.handle._finish(error=RunCancelled(
+                        f"run {p.run_id} cancelled"))
         elif kind == "introspect":
             # built here, between mutations — serially consistent
             msg[1]["snapshot"] = self._introspect_unsafe()
@@ -963,6 +1332,12 @@ class EmeraldRuntime:
         for run in touched:
             if run.run_id in self._runs:
                 self._reap(run)
+        # every message is a drain opportunity — AFTER the reap, which
+        # is where finalizes free run slots and reservations (nudges
+        # from release()/park() land here too); admissions re-enter the
+        # loop as "submit" messages, then the SLO guard runs
+        self._drain_parked()
+        self._check_slo()
         return self._draining and not self._runs
 
     def _push_ready(self, run: _Run, name: str):
@@ -1176,6 +1551,7 @@ class EmeraldRuntime:
         with self._runs_lock:
             del self._runs[run.run_id]
             self._reserved.pop(run.run_id, None)
+            self._live -= 1
         self._fair.remove(run.run_id)
         self.runs_completed += 1
         if run.root_ctx is not None:

@@ -96,6 +96,15 @@ class Step:
     fanout_parent: str = ""                    # original step's name
     shard_index: int = -1                      # k for shard steps
     fanout_shards: int = 0                     # fan-out width N
+    # serving front door: a preemptible step's in-flight broker task may
+    # be checkpoint-aborted and requeued (attempt-free) when an
+    # interactive tenant's SLO is threatened. Only long batch work
+    # should opt in; the verifier's W071 gates fan-out legality.
+    preemptible: bool = False
+    # per-step latency SLO (interactive serving). Feeds the coalescer's
+    # flush deadline and the admission queue's slack ordering; W070
+    # flags it on steps the front door cannot actually batch.
+    slo_ms: Optional[float] = None
     # staged-call parameter names, parallel to ``inputs``: execution
     # calls fn(**{arg_names[i]: value_of(inputs[i])}). None = inputs ARE
     # the parameter names (the default contract). Lets an expanded shard

@@ -15,6 +15,13 @@ A miniature continuous-batching server:
     class, so on a fabric-backed tier they overtake batch tenants' queued
     tasks sharing the same runtime.
 
+:class:`FrontDoor` is the many-tenant entry point on top: concurrent
+single-request ``decode()`` calls from independent client threads
+coalesce (``repro.core.batching.BatchCoalescer``) into ONE fused
+interactive dispatch per flush window — per-task scheduling overhead is
+paid once per batch, per-request deadlines can force an early flush, and
+each participant is charged 1/k of the fused cost.
+
 CLI demo (CPU-sized):
   python -m repro.launch.serve --arch tinyllama-1.1b --reduced
 """
@@ -166,6 +173,70 @@ class Server:
                 "decode_code_only": sum(1 for e in offloads
                                         if e.info.get("code_only")),
                 "bytes_moved": dict(self.mdss.bytes_moved)}
+
+
+class FrontDoor:
+    """Coalescing decode entry point over one shared runtime.
+
+    ``decode_fn(stacked_tokens)`` must be a *batched, row-independent*
+    decode: it receives the (k, ...) stack of k concurrent requests'
+    inputs and returns an array whose row i is request i's output —
+    that row-independence is what makes cross-tenant fusion safe (see
+    ``core/batching``). Each flush becomes ONE interactive-priority
+    submission through the runtime, so k tenants' decodes pay one
+    partition/validate/dispatch round trip instead of k.
+
+    Client threads call ``decode(tokens, deadline_s=...)`` and block on
+    the returned ticket; a request's deadline can flush the bucket
+    early, and ``slo_ms`` arms the runtime's preemption guard for the
+    fused runs themselves.
+    """
+
+    def __init__(self, runtime: EmeraldRuntime, decode_fn, *,
+                 window_s: float = 0.004, max_batch: int = 32,
+                 policy: str = "annotate", remotable: bool = False,
+                 slo_ms: Optional[float] = None, name: str = "frontdoor"):
+        from repro.core.batching import BatchCoalescer
+        self.runtime = runtime
+        self.slo_ms = slo_ms
+        self._fp = getattr(decode_fn, "__name__", "decode")
+
+        def fused_decode_fn(tokens):
+            return {"logits": decode_fn(tokens)}
+
+        wf = Workflow(f"{name}-fused-decode")
+        wf.var("tokens")
+        wf.step("decode", fused_decode_fn, inputs=("tokens",),
+                outputs=("logits",), remotable=remotable, jax_step=False,
+                slo_ms=slo_ms)
+        self._ex = EmeraldExecutor(partition(wf), runtime.manager,
+                                   policy=policy, runtime=runtime)
+        self.coalescer = BatchCoalescer(
+            self._fuse, window_s=window_s, max_batch=max_batch,
+            metrics=runtime.metrics, tracer=runtime.tracer, name=name)
+        runtime.attach_coalescer(self.coalescer)
+
+    def _fuse(self, key, stacked: np.ndarray, k: int) -> np.ndarray:
+        out = self._ex.submit({"tokens": stacked}, fetch=("logits",),
+                              priority=INTERACTIVE).result()
+        return np.asarray(out["logits"])
+
+    # ------------------------------------------------------------------ api
+    def decode(self, tokens, *, deadline_s: Optional[float] = None,
+               charge=None):
+        """Join the current batch for this (code, shape, dtype) bucket;
+        returns a ticket — ``ticket.result()`` is this request's logits
+        row. Requests with different shapes/dtypes never fuse."""
+        arr = np.asarray(tokens)
+        key = (self._fp, arr.shape, str(arr.dtype))
+        return self.coalescer.submit(key, arr, deadline_s=deadline_s,
+                                     charge=charge)
+
+    def stats(self) -> dict:
+        return self.coalescer.introspect()
+
+    def close(self):
+        self.coalescer.close()
 
 
 def main():

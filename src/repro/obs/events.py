@@ -79,6 +79,32 @@ EVENT_SCHEMA: Dict[str, EventSchema] = {e.kind: e for e in [
        required=("shards", "parent"),
        doc="Fan-out gather completed: shard outputs were combined into "
            "the parent step's declared outputs."),
+    _s("park",
+       required=("reason",),
+       optional=("deadline_s", "slo_ms", "depth"),
+       doc="Submission could not be admitted immediately and was parked "
+           "in the front door's bounded admission queue."),
+    _s("admit",
+       required=("waited_s",),
+       optional=("slack_s", "depth"),
+       doc="A parked run was admitted by the drain loop (oldest deadline "
+           "first) once residency and lane capacity freed."),
+    _s("coalesce",
+       required=("key", "pending"),
+       optional=("deadline_s",),
+       doc="A decode request joined a BatchCoalescer bucket and is "
+           "waiting for the flush window."),
+    _s("flush",
+       required=("key", "batch"),
+       optional=("waited_s", "reason", "seconds"),
+       doc="A coalescer bucket flushed: k requests were stacked along "
+           "the batch axis and dispatched as ONE fused task."),
+    _s("preempt",
+       required=("victim",),
+       optional=("slack_s", "step"),
+       doc="An interactive run's SLO was threatened; the longest-running "
+           "preemptible batch task was checkpoint-aborted and requeued "
+           "attempt-free."),
 ]}
 
 

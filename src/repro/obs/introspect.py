@@ -65,6 +65,36 @@ def render(snap: Dict[str, Any]) -> str:
                                    in sorted(placements.items()))
                 lines.append(f"    {r.get('run_id', '?')}: {placed}")
 
+    fd = snap.get("frontdoor", {})
+    if fd and (fd.get("depth") or fd.get("parked_total")
+               or fd.get("coalescers")):
+        lines.append("")
+        lines.append(f"FRONTDOOR  queued={fd.get('depth', 0)}/"
+                     f"{fd.get('queue_limit', '?')} "
+                     f"oldest_wait={fd.get('oldest_wait_s', 0.0):.3f}s "
+                     f"parked_total={fd.get('parked_total', 0)} "
+                     f"admitted={fd.get('admitted_total', 0)}")
+        for p in fd.get("parked", []):
+            slack = p.get("slack_s")
+            slack_s = f"{slack:+.3f}s" if slack is not None else "-"
+            lines.append(f"  {p.get('run_id', '?'):<20} "
+                         f"{p.get('reason', ''):<10} "
+                         f"waited={p.get('waited_s', 0.0):.3f}s "
+                         f"slack={slack_s}")
+        for c in fd.get("coalescers", []):
+            lines.append(
+                f"  coalescer {c.get('name', '?'):<12} "
+                f"flushes={c.get('flushes', 0)} "
+                f"avg_batch={c.get('avg_batch', 0.0):.1f} "
+                f"ema={c.get('exec_ema_s', 0.0):.4f}s")
+            for b in c.get("buckets", []):
+                frac = (b.get("pending", 0) / c["max_batch"]) \
+                    if c.get("max_batch") else 0.0
+                lines.append(f"    {b.get('key', '?'):<32} "
+                             f"[{_bar(frac, 12)}] {b.get('pending', 0)}"
+                             f"/{c.get('max_batch', '?')} "
+                             f"wait={b.get('oldest_wait_s', 0.0):.3f}s")
+
     mdss = snap.get("mdss", {})
     resid = mdss.get("residency", [])
     if resid:

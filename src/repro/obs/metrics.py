@@ -210,6 +210,7 @@ METRIC_CATALOG: Dict[str, str] = {
     "broker.tasks_requeued": "Tasks requeued after worker loss/failure.",
     "broker.tasks_cancelled": "Tasks cancelled before completion.",
     "broker.workers_lost": "Workers declared dead by heartbeat.",
+    "broker.tasks_preempted": "In-flight tasks checkpoint-aborted for SLO.",
     "broker.warm_hits": "Tasks routed to a warm worker.",
     "compile_cache.entries": "Compiled-executable cache entries.",
     "compile_cache.hits": "Compiled-executable cache hits.",
@@ -222,6 +223,15 @@ METRIC_CATALOG: Dict[str, str] = {
     "fanout.shards_dispatched": "Fan-out shard steps granted a lane.",
     "fanout.shards_completed": "Fan-out shard steps completed.",
     "fanout.gathers": "Fan-out gather steps completed.",
+    "frontdoor.parked_depth": "Submissions currently parked for admission.",
+    "frontdoor.parked_total": "Submissions ever parked by the front door.",
+    "frontdoor.admitted_total": "Parked submissions drained into the runtime.",
+    "frontdoor.queue_full": "Submissions refused because the queue was full.",
+    "frontdoor.park_wait_s": "Seconds parked submissions waited for admission.",
+    "frontdoor.preemptions": "SLO-driven preemptions of in-flight batch work.",
+    "frontdoor.coalesced": "Decode requests absorbed into a fused batch.",
+    "frontdoor.flushes": "Coalescer buckets flushed as one fused task.",
+    "frontdoor.fused_batch": "Request count of fused batches (histogram).",
     "mdss.resident_bytes": "Bytes resident across tiers.",
     "mdss.bytes_moved": "Bytes transferred between tiers.",
     "mdss.modeled_seconds": "Cost-model seconds charged to transfers.",

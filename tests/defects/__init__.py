@@ -15,8 +15,8 @@ return a kwargs dict for :func:`repro.analysis.verify` (lint cases:
 (cross-schedule hazards: the :func:`explorer.check_trace` dict shape),
 or for the source lint (lock-discipline cases: ``{"text": snippet}``).
 """
-from . import (hazards, hazards_explore, lint_fanout, lint_graph,
-               lint_locks, lint_memo, lint_offload)
+from . import (hazards, hazards_explore, lint_fanout, lint_frontdoor,
+               lint_graph, lint_locks, lint_memo, lint_offload)
 
 #: rule id -> (kind, make_defective, make_clean); kind in
 #: {"verify", "events", "store", "trace", "source"}.
@@ -25,6 +25,7 @@ CASES.update(lint_graph.CASES)
 CASES.update(lint_offload.CASES)
 CASES.update(lint_memo.CASES)
 CASES.update(lint_fanout.CASES)
+CASES.update(lint_frontdoor.CASES)
 CASES.update(lint_locks.CASES)
 CASES.update(hazards.CASES)
 CASES.update(hazards_explore.CASES)

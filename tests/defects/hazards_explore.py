@@ -81,10 +81,40 @@ def h124_clean():
                          "digests": {"A": {"x": "d1", "y": "d2"}}}]}
 
 
+# H125: a parked run stayed admissible (free slot, head of the
+# deadline order) for a full admission window of drain rounds without
+# being admitted (rows: (admitted_runs, eligible_runs)).
+def h125_defective():
+    return {"admission_rounds": [((), ("B",)), ((), ("B",)),
+                                 ((), ("B",)), ((), ("B",))],
+            "admission_window": 4}
+
+
+def h125_clean():
+    # the drain loop admits the owed run before the window closes
+    return {"admission_rounds": [((), ("B",)), ((), ("B",)),
+                                 ((), ("B",)), (("B",), ("B",))],
+            "admission_window": 4}
+
+
+# H126: a preempted batch step burned retry budget or lost a
+# checkpointed completion (rows: (run, step, d_attempts, ckpt_before,
+# ckpt_after)).
+def h126_defective():
+    return {"preempt_log": [("C", "bat1", 1, 2, 1)]}
+
+
+def h126_clean():
+    # attempt-free requeue, checkpoint intact: only in-flight work lost
+    return {"preempt_log": [("C", "bat1", 0, 2, 2)]}
+
+
 CASES = {
     "H120": ("trace", h120_defective, h120_clean),
     "H121": ("trace", h121_defective, h121_clean),
     "H122": ("trace", h122_defective, h122_clean),
     "H123": ("trace", h123_defective, h123_clean),
     "H124": ("trace", h124_defective, h124_clean),
+    "H125": ("trace", h125_defective, h125_clean),
+    "H126": ("trace", h126_defective, h126_clean),
 }

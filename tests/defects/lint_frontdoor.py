@@ -1,0 +1,64 @@
+"""Serving front-door defects: SLOs on steps the batch coalescer
+cannot fuse, and preemptible fan-out shards with no gather barrier.
+
+W070 fires on the user-declared step (an ``slo_ms`` hint the front
+door can never honour); W071 on the expanded shard/gather form
+(hand-built here, as a mutated or hand-rolled expansion would be).
+"""
+from repro.core.workflow import Workflow
+
+
+def _fn(**kw):
+    return {}
+
+
+# W070: slo_ms on a step the coalescer cannot batch — not remotable
+# (never dispatches through the front door's fused path) here.
+def w070_defective():
+    wf = Workflow("slo-local")
+    wf.var("tok")
+    wf.step("decode", _fn, inputs=("tok",), outputs=("logits",),
+            remotable=False, slo_ms=5.0)
+    return {"wf": wf, "provided": {"tok"}}
+
+
+def w070_clean():
+    wf = Workflow("slo-local-clean")
+    wf.var("tok")
+    wf.step("decode", _fn, inputs=("tok",), outputs=("logits",),
+            remotable=True, slo_ms=5.0)
+    return {"wf": wf, "provided": {"tok"}}
+
+
+# W071: a preemptible shard whose fan-out has no gather step — a
+# preempted-and-requeued shard re-publishes its shard URI with no
+# barrier fencing downstream readers.
+def _shards(wf, preemptible):
+    for k in range(2):
+        wf.step(f"big#{k}", _fn, inputs=("P",), outputs=(f"out#{k}",),
+                fanout_role="shard", fanout_parent="big",
+                shard_index=k, fanout_shards=2, preemptible=preemptible)
+
+
+def w071_defective():
+    wf = Workflow("preempt-no-gather")
+    wf.var("P")
+    _shards(wf, preemptible=True)
+    wf.step("read", _fn, inputs=("out#0", "out#1"), outputs=("r",))
+    return {"wf": wf, "provided": {"P"}}
+
+
+def w071_clean():
+    wf = Workflow("preempt-gather-clean")
+    wf.var("P")
+    _shards(wf, preemptible=True)
+    wf.step("big.gather", _fn, inputs=("out#0", "out#1"),
+            outputs=("out",), fanout_role="gather", fanout_parent="big",
+            fanout_shards=2)
+    return {"wf": wf, "provided": {"P"}}
+
+
+CASES = {
+    "W070": ("verify", w070_defective, w070_clean),
+    "W071": ("verify", w071_defective, w071_clean),
+}
